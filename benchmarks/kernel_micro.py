@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: wall-clock us_per_call of the XLA implementations
+on this host (CPU) + modeled TPU-v5e latency from the cost model.  Interpret-
+mode Pallas timings are NOT reported (they measure the interpreter, not the
+TPU); the dry-run roofline is the TPU-side evidence.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def timeit(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    print("benchmark,kernel,shape,us_per_call,derived_gflops")
+    m = n = k = 512
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    us = timeit(lambda x, y: ops.matmul(x, y, implementation="xla"), a, b)
+    print(f"micro,gemm,{m}x{n}x{k},{us:.1f},{2*m*n*k/us/1e3:.2f}")
+
+    q = jnp.asarray(rng.standard_normal((1, 1024, 8, 64)), jnp.bfloat16)
+    kk = jnp.asarray(rng.standard_normal((1, 1024, 2, 64)), jnp.bfloat16)
+    us = timeit(lambda q, k: ops.attention(q, k, k, implementation="xla"),
+                q, kk)
+    flops = 4 * 1024 * 1024 * 8 * 64
+    print(f"micro,flash_attention,b1s1024h8d64,{us:.1f},{flops/us/1e3:.2f}")
+
+    r = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32)
+    w = jnp.asarray(-np.exp(rng.standard_normal((1, 512, 8, 64)) * .3),
+                    jnp.float32)
+    u = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    us = timeit(lambda r, w: ops.rwkv6(r, r, r, w, u,
+                                       implementation="xla")[0], r, w)
+    print(f"micro,rwkv6,b1s512h8,{us:.1f},")
+
+    x = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32)
+    av = jnp.asarray(-np.abs(rng.standard_normal((1, 512, 8)) * .3),
+                     jnp.float32)
+    bc = jnp.asarray(rng.standard_normal((1, 512, 8, 32)), jnp.float32)
+    us = timeit(lambda x, a: ops.mamba2(x, a, bc, bc,
+                                        implementation="xla")[0], x, av)
+    print(f"micro,mamba2_ssd,b1s512h8n32,{us:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Serving example: batched request scheduling with prefill + decode against
+a KV cache (reduced config on CPU; same code path as the decode dry-run).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv += ["--arch", "gemma2-2b"]
+    sys.argv = [sys.argv[0], "--smoke", "--requests", "8", "--slots", "4",
+                "--max-new", "8", *argv]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""rwkv6-3b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892; hf]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="rwkv6",
+    n_layers=32, d_model=2560, n_heads=0, n_kv_heads=0,
+    d_ff=8960, vocab=65536, rwkv_head_dim=64,
+)

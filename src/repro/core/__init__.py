@@ -1,0 +1,22 @@
+"""HASCO core: TST IR, two-step tensorize matching, HW/SW design spaces,
+cost model, MOBO / NSGA-II / random hardware DSE, heuristic + Q-learning
+software DSE, and the co-design driver (paper Fig. 3)."""
+
+from .codesign import Constraints, Solution, codesign, separate_design
+from .cost_model import CostReport, evaluate
+from .hw_primitives import HWBuilder, HWConfig
+from .hw_space import HWSpace
+from .intrinsics import ALL_INTRINSICS
+from .matching import TensorizeChoice, match, partition_space
+from .mobo import mobo
+from .nsga2 import nsga2
+from .random_search import random_search
+from .sw_primitives import Schedule
+from .tst import TensorExpr, parse
+
+__all__ = [
+    "ALL_INTRINSICS", "Constraints", "CostReport", "HWBuilder", "HWConfig",
+    "HWSpace", "Schedule", "Solution", "TensorExpr", "TensorizeChoice",
+    "codesign", "evaluate", "match", "mobo", "nsga2", "parse",
+    "partition_space", "random_search", "separate_design",
+]

@@ -1,0 +1,282 @@
+"""The HASCO co-design flow (paper §III, Fig. 3).
+
+  Step 1  HW/SW partitioning — tensorize choices from TST matching.
+  Step 2  Solution generation — hardware DSE (MOBO over accelerator
+          parameters, objective = best-software latency / power / area) and
+          software DSE (heuristic + Q-learning) per workload.
+  Step 3  Solution tuning — pick Pareto points meeting the user constraints;
+          if none satisfy them, extend the hardware DSE with more trials.
+
+Baselines implemented alongside (paper §VII-D/E):
+  * ``separate_design``  — hardware picked with a default/naive software
+    mapping (the traditional decoupled methodology of Table III).
+  * ``library_schedule`` — im2col-style fixed library mapping (Fig. 11).
+  * ``template_search``  — AutoTVM-style: fixed tensorize choice + source
+    loop order, only tile sizes explored (Fig. 11).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import sw_dse
+from .hw_primitives import HWConfig
+from .hw_space import HWSpace
+from .matching import TensorizeChoice, partition_space
+from .intrinsics import ALL_INTRINSICS
+from .mobo import DSEResult, mobo
+from .qlearning import DQN
+from .sw_primitives import Schedule
+from .sw_space import SoftwareSpace
+from .tst import TensorExpr
+
+
+@dataclass
+class Constraints:
+    """User constraints from the input description (paper Fig. 3)."""
+
+    latency_s: float = math.inf
+    power_w: float = math.inf
+    area_um2: float = math.inf
+
+    def as_bounds(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        if math.isfinite(self.latency_s):
+            out[0] = self.latency_s
+        if math.isfinite(self.power_w):
+            out[1] = self.power_w
+        if math.isfinite(self.area_um2):
+            out[2] = self.area_um2
+        return out
+
+
+@dataclass
+class Solution:
+    """A holistic solution: one accelerator shared by the application, one
+    schedule (+ interface) per workload (paper §III)."""
+
+    hw: HWConfig
+    schedules: dict[str, Schedule]
+    latency_s: float
+    power_w: float
+    area_um2: float
+    intrinsic: str
+
+    def describe(self) -> str:
+        return (f"{self.intrinsic}: pe={self.hw.pe_rows}x{self.hw.pe_cols}"
+                f"x{self.hw.pe_depth} vmem={self.hw.vmem_kib}KiB "
+                f"banks={self.hw.banks} df={self.hw.dataflow} | "
+                f"lat={self.latency_s:.4e}s pow={self.power_w:.2f}W "
+                f"area={self.area_um2:.3e}um2")
+
+
+@dataclass
+class CodesignReport:
+    solution: Solution | None
+    per_intrinsic: dict[str, DSEResult]
+    partition_sizes: dict[tuple[str, str], int]
+    evaluations: int
+
+
+def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
+                  *, target: str = "spatial", seed: int = 0,
+                  sw_budget: str = "small"):
+    """The paper's correlated objective: evaluating a hardware point runs the
+    software DSE and reports the *achieved* latency plus power/area."""
+    from .cost_model import TARGETS, accelerator_area, evaluate
+
+    def f(hw: HWConfig) -> tuple[float, float, float]:
+        results = sw_dse.optimize_set(workloads, partition, hw,
+                                      target=target, seed=seed,
+                                      budget=sw_budget)
+        if not results:
+            return (math.inf, math.inf, math.inf)
+        lat = sw_dse.total_latency(results)
+        # power: energy-weighted average across workloads at their schedules
+        e_tot = 0.0
+        for w in workloads:
+            r = results.get(w.name)
+            if r is None:
+                return (math.inf, math.inf, math.inf)
+            rep = evaluate(w, r.schedule, hw, target)
+            if not rep.legal:
+                return (math.inf, math.inf, math.inf)
+            e_tot += rep.energy_j
+        tgt = TARGETS[target]
+        return (lat, e_tot / max(lat, 1e-12), accelerator_area(hw, tgt))
+
+    return f
+
+
+def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
+             constraints: Constraints = None, target: str = "spatial",
+             n_trials: int = 20, n_init: int = 5, seed: int = 0,
+             sw_budget: str = "small",
+             space_axes: dict | None = None) -> CodesignReport:
+    """Full HASCO flow over one application (= workload set)."""
+    intrinsics = intrinsics or ["GEMM", "GEMV", "DOT", "CONV2D"]
+    constraints = constraints or Constraints()
+
+    # Step 1: partition space
+    intr_tsts = [ALL_INTRINSICS[i.upper()] for i in intrinsics]
+    partition = partition_space(intr_tsts, workloads)
+    sizes = {k: len(v) for k, v in partition.items()}
+
+    per_intrinsic: dict[str, DSEResult] = {}
+    evals = 0
+    best: Solution | None = None
+
+    for intrinsic in intrinsics:
+        intrinsic = intrinsic.upper()
+        # the intrinsic must cover every workload of the application
+        if not all((w.name, intrinsic) in partition for w in workloads):
+            continue
+        space = HWSpace(intrinsic)
+        if space_axes:
+            space = HWSpace(intrinsic, axes={**space.axes, **space_axes})
+        f = hw_objectives(workloads, partition, intrinsic, target=target,
+                          seed=seed, sw_budget=sw_budget)
+        res = mobo(space, f, n_init=n_init, n_trials=n_trials, seed=seed)
+        per_intrinsic[intrinsic] = res
+        evals += res.evaluations
+
+        pick = res.best_under(constraints.as_bounds())
+        if pick is None:
+            continue
+        hw, y = pick
+        # Step 3: refine the chosen point with the full software budget
+        results = sw_dse.optimize_set(workloads, partition, hw, target=target,
+                                      seed=seed, budget="full")
+        lat = sw_dse.total_latency(results)
+        sol = Solution(hw, {k: r.schedule for k, r in results.items()},
+                       min(lat, y[0]), y[1], y[2], intrinsic)
+        if best is None or sol.latency_s < best.latency_s:
+            best = sol
+
+    return CodesignReport(best, per_intrinsic, sizes, evals)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def separate_design(workloads: list[TensorExpr], hw: HWConfig, *,
+                    target: str = "spatial", seed: int = 0,
+                    tuned_software: bool = True) -> Solution:
+    """The traditional decoupled flow (Table III baseline): the accelerator
+    ``hw`` was fixed without feedback from software DSE; software is then
+    tuned (AutoTVM-style if ``tuned_software``) for that fixed hardware."""
+    from .cost_model import TARGETS, accelerator_area, evaluate
+
+    intr = ALL_INTRINSICS[hw.intrinsic]
+    partition = partition_space([intr], workloads)
+    schedules: dict[str, Schedule] = {}
+    lat = 0.0
+    e_tot = 0.0
+    for w in workloads:
+        choices = partition.get((w.name, hw.intrinsic))
+        if not choices:
+            return Solution(hw, {}, math.inf, math.inf,
+                            accelerator_area(hw, TARGETS[target]), hw.intrinsic)
+        if tuned_software:
+            r = template_search(w, choices[0], hw, target=target, seed=seed)
+            schedules[w.name] = r
+        else:
+            schedules[w.name] = SoftwareSpace(w, choices, hw, target).default_schedule()
+        rep = evaluate(w, schedules[w.name], hw, target)
+        lat += rep.latency_s
+        e_tot += rep.energy_j if rep.legal else math.inf
+    area = accelerator_area(hw, TARGETS[target])
+    return Solution(hw, schedules, lat, e_tot / max(lat, 1e-12), area,
+                    hw.intrinsic)
+
+
+def template_search(workload: TensorExpr, choice: TensorizeChoice,
+                    hw: HWConfig, *, target: str = "spatial", seed: int = 0,
+                    budget: int = 64) -> Schedule:
+    """AutoTVM-style fixed-template tuning (paper §VII-D): the tensorize
+    choice and loop order are fixed by the template author; only the sizes of
+    tensorized sub-workloads (tile factors) are explored."""
+    from .cost_model import evaluate
+
+    rng = np.random.default_rng(seed)
+    ext = workload.extents
+    mapped = list(choice.mapped_compute_indices)
+    order = tuple(workload.all_indices())  # source order: template-fixed
+
+    def random_tiles() -> tuple[tuple[str, int], ...]:
+        ts = []
+        for c in mapped:
+            hi = int(math.log2(max(1, ext[c])))
+            ts.append((c, min(ext[c], 1 << int(rng.integers(0, hi + 1)))))
+        return tuple(sorted(ts))
+
+    best, best_lat = None, math.inf
+    for _ in range(budget):
+        s = Schedule(choice, random_tiles(), order, 0)
+        l = evaluate(workload, s, hw, target).latency_s
+        if l < best_lat:
+            best, best_lat = s, l
+    return best
+
+
+def human_template_choice(workload: TensorExpr,
+                          choices: list[TensorizeChoice]) -> TensorizeChoice:
+    """The choice a template author would write by hand: maximize the compute
+    the intrinsic covers (product of mapped loop extents), untransposed."""
+    def score(c):
+        prod = 1
+        for l in c.mapped_compute_indices:
+            prod *= workload.extents[l]
+        return (prod, not c.transposed)
+    return max(choices, key=score)
+
+
+HOST_DMA_GBPS = 2.0   # im2col/col2im run host-side (Gemmini library [24]):
+# the expansion is materialized through the host DMA path, not accelerator
+# HBM — this is exactly why the paper's Fig. 11 shows the conversion
+# dominating whole-layer latency.
+
+
+def library_schedule(workload: TensorExpr, hw: HWConfig,
+                     target: str = "spatial"):
+    """The im2col library mapping (paper §VII-D, [24]): convert the
+    convolution to one big GEMM (unfold operands), then split by the array
+    shape.  Models the im2col/col2im traffic overhead explicitly:
+    the unfolded matrix ``A'[c·r·s, x·y]`` is materialized host-side (one
+    write + read of the expanded operand) and the output is folded back."""
+    from .cost_model import DTYPE_BYTES, TARGETS, evaluate
+    from .matching import match
+    from .intrinsics import GEMM
+    from .workloads import gemm as make_gemm
+
+    tgt = TARGETS[target]
+    ext = workload.extents
+    if set(ext) >= {"k", "c", "x", "y", "r", "s"}:  # a convolution
+        gm = make_gemm(ext["k"], ext["x"] * ext["y"], ext["c"] * ext["r"] * ext["s"],
+                       name=f"{workload.name}_im2col")
+        expanded = (ext["c"] * ext["r"] * ext["s"] * ext["x"] * ext["y"]
+                    * DTYPE_BYTES)
+        folded = ext["k"] * ext["x"] * ext["y"] * DTYPE_BYTES
+        # write + read of A' at im2col, write + read of L at col2im
+        conv_overhead_s = 2.0 * (expanded + folded) / (HOST_DMA_GBPS * 1e9)
+    else:
+        gm, conv_overhead_s = workload, 0.0
+
+    choices = match(GEMM, gm)
+    space = SoftwareSpace(gm, choices, hw, target)
+    sched = space.default_schedule()
+    # the library splits by array shape & scratchpad: grow tiles while legal
+    for loop in list(sched.tile_map):
+        while True:
+            bigger = sched.with_tile(loop, min(gm.extents[loop],
+                                               sched.tile_map[loop] * 2))
+            if bigger.tile_map[loop] == sched.tile_map[loop]:
+                break
+            if not evaluate(gm, bigger, hw, target).legal:
+                break
+            sched = bigger
+    rep = evaluate(gm, sched, hw, target)
+    return sched, rep.latency_s + conv_overhead_s, conv_overhead_s

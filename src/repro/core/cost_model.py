@@ -1,0 +1,264 @@
+"""Analytical accelerator cost model — the Maestro analogue (paper §III,
+§VII-A "Metrics"; DESIGN.md §4).
+
+Estimates (latency, power, area) for running one workload under a schedule on
+one accelerator instance.  Two targets share the same machinery:
+
+  * ``spatial`` — paper-faithful: the accelerator's peak is 2·PEs·freq, PE
+    arrays may be small (8×8 …), exactly the regime of the paper's FPGA/ASIC
+    prototypes.  Used to reproduce Fig. 7 / Table II / Table III.
+  * ``tpu``     — v5e-class constants (197 TFLOP/s bf16, 819 GB/s HBM) where
+    the "PE array" is the Pallas block shape and utilization includes MXU
+    (128-lane) alignment.  Used for kernel tuning and the roofline bridge.
+
+The reuse model is the classic stationarity-from-loop-order analysis: an
+operand is re-fetched from DRAM/HBM each time the innermost loop that indexes
+it advances; loops strictly inner to that reuse the scratchpad-resident tile.
+This is what makes p1-vs-p2-style loop-order effects (paper Fig. 2) visible.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .hw_primitives import HWConfig
+from .sw_primitives import Schedule
+from .tst import TensorExpr
+
+DTYPE_BYTES = 2       # bf16 operands
+ACC_BYTES = 4         # f32 accumulation
+
+# -- target constants ---------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Target:
+    name: str
+    freq_hz: float            # PE MAC rate (spatial) / MXU clock (tpu)
+    hbm_gbps: float           # off-chip bandwidth
+    dma_overhead_bytes: int   # per-descriptor fixed cost (burst model)
+    mxu_aligned: bool         # apply 128-lane alignment penalties
+    startup_s: float          # kernel/interface launch overhead
+    # energy constants (pJ)
+    e_mac_pj: float
+    e_sram_pj_b: float
+    e_dram_pj_b: float
+    # area constants (um^2)
+    a_pe_um2: float
+    a_mem_um2_b: float
+    static_w_per_norm: float  # static power at full resource envelope
+
+
+SPATIAL = Target("spatial", freq_hz=940e6, hbm_gbps=32.0,
+                 dma_overhead_bytes=64, mxu_aligned=False, startup_s=2e-7,
+                 # dma_overhead 64B ~ AXI4 burst setup on FPGA DDR,
+                 # startup = instruction-issue cost of one tensorize-interface
+                 # invocation (the paper's interfaces are accelerator
+                 # instruction sequences, not host launches)
+                 e_mac_pj=0.6, e_sram_pj_b=1.0, e_dram_pj_b=30.0,
+                 a_pe_um2=1.0e5, a_mem_um2_b=120.0, static_w_per_norm=2.0)
+
+TPU_V5E = Target("tpu", freq_hz=940e6, hbm_gbps=819.0,
+                 dma_overhead_bytes=512, mxu_aligned=True, startup_s=1e-6,
+                 e_mac_pj=0.25, e_sram_pj_b=0.6, e_dram_pj_b=15.0,
+                 a_pe_um2=1.0e5, a_mem_um2_b=120.0, static_w_per_norm=4.0)
+
+TARGETS = {"spatial": SPATIAL, "tpu": TPU_V5E}
+
+
+@dataclass(frozen=True)
+class CostReport:
+    latency_s: float
+    energy_j: float
+    power_w: float
+    area_um2: float
+    flops: float              # padded (actually executed) flops
+    useful_flops: float       # the workload's mathematical flops
+    hbm_bytes: float
+    compute_s: float
+    memory_s: float
+    calls: int                # tensorize-interface invocations
+    vmem_bytes: int           # scratchpad working set claimed
+    legal: bool
+    why_illegal: str = ""
+
+    @property
+    def objectives(self) -> tuple[float, float, float]:
+        """(latency, power, area) — all minimized (paper's Table II axes)."""
+        return (self.latency_s, self.power_w, self.area_um2)
+
+    @property
+    def utilization(self) -> float:
+        return self.useful_flops / max(self.flops, 1.0)
+
+
+ILLEGAL = CostReport(math.inf, math.inf, math.inf, math.inf, 0, 0, 0,
+                     math.inf, math.inf, 0, 0, False)
+
+
+def n_pes(hw: HWConfig) -> int:
+    """PE count per intrinsic family (paper Fig. 7 fixes a PE *budget*)."""
+    if hw.intrinsic in ("GEMM", "CONV2D"):
+        return hw.pe_rows * hw.pe_cols
+    if hw.intrinsic == "GEMV":
+        return hw.pe_rows * min(hw.pe_depth, 128)
+    return min(hw.pe_depth, 4096)  # DOT: a reduction lane
+
+
+def accelerator_area(hw: HWConfig, target: Target) -> float:
+    mem = hw.vmem_bytes + hw.local_accum_kib * 1024
+    return (target.a_pe_um2 * n_pes(hw)
+            + target.a_mem_um2_b * mem * (1.0 + 0.05 * (hw.banks - 1)))
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _mxu_eff(dim: int, lanes: int) -> float:
+    """Fraction of the 128-lane MXU filled by a block dim (tpu target)."""
+    return dim / (_ceil(dim, lanes) * lanes) if dim else 1.0
+
+
+def evaluate(workload: TensorExpr, schedule: Schedule, hw: HWConfig,
+             target: Target | str = "spatial") -> CostReport:
+    """Latency/power/area of running ``workload`` with ``schedule`` on ``hw``."""
+    tgt = TARGETS[target] if isinstance(target, str) else target
+    choice = schedule.choice
+    if choice.intrinsic_name != hw.intrinsic:
+        return ILLEGAL
+
+    ext = workload.extents
+    tiles = schedule.tile_map
+    mapped = dict(choice.index_map)                # intrinsic idx -> compute idx
+    inv_mapped = {c: q for q, c in mapped.items()}
+    block = hw.intrinsic_dims()                    # intrinsic idx -> block extent
+
+    # --- interface tile per mapped loop, padded to the intrinsic block -------
+    tile: dict[str, int] = {}
+    ptile: dict[str, int] = {}
+    align_eff = 1.0
+    for q, c in mapped.items():
+        t = max(1, min(tiles.get(c, ext[c]), ext[c]))
+        b = max(1, block[q])
+        pt = _ceil(t, b) * b
+        tile[c] = t
+        ptile[c] = pt
+        align_eff *= t / pt
+    if align_eff <= 0:
+        return ILLEGAL
+
+    # --- outer software loops (trip counts use the LOGICAL tile: padding is
+    # waste inside each call, not fewer calls) --------------------------------
+    all_loops = list(workload.all_indices())
+    trips = {l: (_ceil(ext[l], tile[l]) if l in inv_mapped else ext[l])
+             for l in all_loops}
+    order = [l for l in schedule.order if l in trips]
+    order += [l for l in all_loops if l not in order]      # robustness
+    calls = 1
+    for l in all_loops:
+        calls *= trips[l]
+
+    # --- per-call footprints (bytes) -------------------------------------------
+    tensors = workload.tensors()
+    foot: dict[str, int] = {}
+    contig: dict[str, int] = {}
+    for tname, dims in tensors.items():
+        sz = 1
+        for dim in dims:
+            contrib = sum(ptile.get(i, 1) for i in dim) - (len(dim) - 1)
+            sz *= max(1, contrib)
+        foot[tname] = sz * DTYPE_BYTES
+        last = dims[-1]
+        contig[tname] = max(1, sum(ptile.get(i, 1) for i in last)
+                            - (len(last) - 1)) * DTYPE_BYTES
+    out_foot = 1
+    for i in workload.out_indices:
+        out_foot *= ptile.get(i, 1)
+    out_bytes = out_foot * ACC_BYTES
+    out_contig = ptile.get(workload.out_indices[-1], 1) * ACC_BYTES
+
+    # --- scratchpad legality ----------------------------------------------------
+    buffered = 2 if hw.banks >= 2 else 1
+    local = hw.local_accum_kib * 1024
+    out_in_vmem = out_bytes if out_bytes > local else 0
+    working = sum(foot.values()) * buffered + out_in_vmem
+    if working > hw.vmem_bytes:
+        return CostReport(math.inf, math.inf, math.inf,
+                          accelerator_area(hw, tgt), 0, 0, 0, math.inf,
+                          math.inf, calls, working, False,
+                          f"working set {working}B > vmem {hw.vmem_bytes}B")
+
+    # --- compute time --------------------------------------------------------
+    pes = n_pes(hw)
+    peak = 2.0 * pes * tgt.freq_hz
+    eff = 1.0
+    if tgt.mxu_aligned:
+        eff *= _mxu_eff(hw.pe_rows, 8) * _mxu_eff(hw.pe_cols, 128)
+        if hw.intrinsic in ("GEMV", "DOT"):
+            eff *= 0.5  # rank-deficient MXU issue
+    # dataflow consistency (paper: order must match the accelerator dataflow)
+    stationary = {"OS": "__out__", "WS": list(tensors)[-1],
+                  "IS": list(tensors)[0]}[hw.dataflow]
+    innermost = order[-1] if order else all_loops[-1]
+    idx_of = {t: {i for dim in dims for i in dim} for t, dims in tensors.items()}
+    idx_of["__out__"] = set(workload.out_indices)
+    if innermost in idx_of.get(stationary, set()):
+        eff *= 0.85  # stationary operand thrashes: pipeline drain per call
+    flops_call = 2.0
+    for c in mapped.values():
+        flops_call *= ptile[c]
+    # unmapped loops run outside the intrinsic — one call covers mapped dims
+    total_flops = flops_call * calls
+    compute_s = total_flops / (peak * max(eff, 1e-6)) + tgt.startup_s * calls
+
+    # --- memory traffic with loop-order reuse ----------------------------------
+    pos = {l: k for k, l in enumerate(order)}
+
+    def fetches(index_set: set[str]) -> int:
+        inner = max((pos[l] for l in order if l in index_set), default=-1)
+        f = 1
+        for l in order[: inner + 1]:
+            f *= trips[l]
+        return f
+
+    hbm_bytes = 0.0
+    mem_s = 0.0
+    for tname in tensors:
+        n_fetch = fetches(idx_of[tname])
+        burst = min(hw.burst_bytes, contig[tname])
+        dma_eff = burst / (burst + tgt.dma_overhead_bytes)
+        tb = n_fetch * foot[tname]
+        hbm_bytes += tb
+        mem_s += tb / (tgt.hbm_gbps * 1e9 * dma_eff)
+    # output: revisit when a reduced loop is outer to the O-resident span
+    p_out = max((pos[l] for l in order if l in idx_of["__out__"]), default=-1)
+    revisit = any(l in workload.reduced for l in order[: p_out + 1]
+                  if l not in idx_of["__out__"])
+    n_out = fetches(idx_of["__out__"])
+    out_total = n_out * out_bytes * (2 if revisit else 1)
+    burst = min(hw.burst_bytes, out_contig)
+    dma_eff = burst / (burst + tgt.dma_overhead_bytes)
+    hbm_bytes += out_total
+    mem_s += out_total / (tgt.hbm_gbps * 1e9 * dma_eff)
+
+    # --- combine ----------------------------------------------------------------
+    if hw.banks >= 2:
+        latency = max(compute_s, mem_s) + min(compute_s, mem_s) / max(calls, 1)
+    else:
+        latency = compute_s + mem_s
+
+    # --- energy / power / area ---------------------------------------------------
+    macs = total_flops / 2.0
+    sram_bytes = 3.0 * macs * DTYPE_BYTES / max(1, min(hw.pe_rows, 128))
+    area = accelerator_area(hw, tgt)
+    area_norm = (tgt.a_pe_um2 * pes) / (tgt.a_pe_um2 * 4096) \
+        + (hw.vmem_bytes * tgt.a_mem_um2_b) / (16384 * 1024 * tgt.a_mem_um2_b)
+    energy = (macs * tgt.e_mac_pj + sram_bytes * tgt.e_sram_pj_b
+              + hbm_bytes * tgt.e_dram_pj_b) * 1e-12 \
+        + tgt.static_w_per_norm * area_norm * latency
+    power = energy / max(latency, 1e-12)
+
+    return CostReport(latency, energy, power, area, total_flops,
+                      float(workload.flops()), hbm_bytes, compute_s, mem_s,
+                      calls, int(working), True)

@@ -1,0 +1,28 @@
+"""Candidate-value heuristic (paper §VI-B, Fig. 5(d)).
+
+The paper values a candidate ``p`` with latency ``l_p`` against the best
+latency in history ``l*`` as ``exp(-(l* - l_p)/l*)``.  Taken literally that
+rewards *worse* candidates (l_p > l* ⇒ value > 1); we use the evidently
+intended sign, ``exp(-(l_p - l*)/l*)``, so the best candidate scores 1.0 and
+worse candidates decay — the FlexTensor [85] convention the paper cites.
+This deviation is recorded in EXPERIMENTS.md §Fidelity.
+"""
+from __future__ import annotations
+
+import math
+
+
+def candidate_value(latency: float, best_latency: float) -> float:
+    if not math.isfinite(latency):
+        return 0.0
+    if best_latency <= 0:
+        return 0.0
+    return math.exp(-(latency - best_latency) / best_latency)
+
+
+def top_k(pool: list, latencies: list[float], k: int) -> list[int]:
+    """Indices of the k most valuable candidates."""
+    best = min((l for l in latencies if math.isfinite(l)), default=math.inf)
+    scored = sorted(range(len(pool)),
+                    key=lambda i: -candidate_value(latencies[i], best))
+    return scored[:k]

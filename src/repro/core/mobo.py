@@ -1,0 +1,162 @@
+"""Multi-objective Bayesian optimization (paper §V-B, Algorithm 1).
+
+GP surrogate per objective (log-space), hypervolume-based probability of
+improvement acquisition [Auger et al.]: the acquisition of a candidate is the
+Monte-Carlo probability that its posterior draw enlarges the current
+dominated hypervolume, tie-broken by the expected enlargement.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .hw_primitives import HWConfig
+from .hw_space import HWSpace
+from .pareto import default_reference, hypervolume, pareto_mask
+from .surrogate import GP
+
+Objectives = Callable[[HWConfig], tuple[float, ...]]
+
+
+@dataclass
+class DSEResult:
+    configs: list[HWConfig]
+    ys: np.ndarray                       # (n, n_obj), minimized
+    hv_history: list[float]              # hypervolume after each trial
+    evaluations: int
+    ref: np.ndarray
+
+    @property
+    def pareto_configs(self) -> list[HWConfig]:
+        mask = pareto_mask(self.ys)
+        return [c for c, m in zip(self.configs, mask) if m]
+
+    @property
+    def pareto_ys(self) -> np.ndarray:
+        return self.ys[pareto_mask(self.ys)]
+
+    def best_under(self, constraints: dict[int, float]) -> tuple[HWConfig, np.ndarray] | None:
+        """Lowest-latency (objective 0) point satisfying y[i] <= bound."""
+        ok = np.ones(len(self.ys), dtype=bool)
+        for i, bound in constraints.items():
+            ok &= self.ys[:, i] <= bound
+        if not ok.any():
+            return None
+        idx = int(np.argmin(np.where(ok, self.ys[:, 0], np.inf)))
+        return self.configs[idx], self.ys[idx]
+
+
+def _finite_rows(ys: np.ndarray) -> np.ndarray:
+    return np.all(np.isfinite(ys), axis=1)
+
+
+def shared_reference(results: list[DSEResult], margin: float = 1.3) -> np.ndarray:
+    """A common reference point over several DSE runs so their hypervolume
+    histories are comparable (paper Fig. 10 plots all methods on one axis)."""
+    rows = []
+    for r in results:
+        m = _finite_rows(r.ys)
+        if m.any():
+            rows.append(np.log10(np.maximum(r.ys[m], 1e-30)))
+    return default_reference(np.vstack(rows), margin=margin)
+
+
+def rescore_hv_history(result: DSEResult, ref: np.ndarray) -> list[float]:
+    """Recompute a run's hypervolume-vs-trial curve under a shared ref."""
+    out = []
+    for i in range(1, len(result.ys) + 1):
+        sub = result.ys[:i]
+        m = _finite_rows(sub)
+        out.append(hypervolume(np.log10(np.maximum(sub[m], 1e-30)), ref)
+                   if m.any() else 0.0)
+    return out
+
+
+def mobo(space: HWSpace, objectives: Objectives, *, n_init: int = 5,
+         n_trials: int = 20, seed: int = 0, n_candidates: int = 256,
+         n_draws: int = 24, ref: np.ndarray | None = None) -> DSEResult:
+    """Algorithm 1.  ``objectives`` returns minimized metrics, e.g.
+    (latency_s, power_w, area_um2)."""
+    rng = np.random.default_rng(seed)
+
+    configs: list[HWConfig] = space.sample(rng, n_init)
+    ys = np.array([objectives(c) for c in configs], dtype=float)
+    tried = {c.encode() for c in configs}
+
+    fin = _finite_rows(ys)
+    if ref is None:
+        base = ys[fin] if fin.any() else np.ones((1, ys.shape[1]))
+        ref = default_reference(np.log10(np.maximum(base, 1e-30)), margin=1.3)
+    hv_history = []
+
+    def hv_of(y: np.ndarray) -> float:
+        m = _finite_rows(y)
+        if not m.any():
+            return 0.0
+        return hypervolume(np.log10(np.maximum(y[m], 1e-30)), ref)
+
+    for _ in range(len(configs)):
+        hv_history.append(0.0)
+    hv_history[-1] = hv_of(ys)
+
+    while len(configs) < n_trials:
+        fin = _finite_rows(ys)
+        if fin.sum() >= 2:
+            # impute illegal/failed points at a log-space penalty above the
+            # observed worst so the surrogate learns to avoid them (dropping
+            # them wastes the paper's scarce trials on infeasible regions)
+            X = np.stack([space.encode01(c) for c in configs])
+            Ylog = np.log10(np.maximum(ys, 1e-30))
+            worst = np.nanmax(np.where(np.isfinite(Ylog), Ylog, np.nan),
+                              axis=0)
+            Y = np.where(np.isfinite(Ylog), Ylog, worst + 1.0)
+            gps = [GP().fit(X, Y[:, j]) for j in range(Y.shape[1])]
+        else:
+            gps = None
+
+        cands = space.sample(rng, n_candidates, exclude=tried)
+        if not cands:
+            break
+        if gps is None:
+            pick = cands[0]
+        else:
+            Xc = np.stack([space.encode01(c) for c in cands])
+            hv_now = hv_of(ys)
+            Ylog = np.log10(np.maximum(ys[fin], 1e-30))
+            # stage 1: rank by HVI of the posterior mean (cheap prefilter)
+            means = np.stack([g.predict(Xc)[0] for g in gps], axis=-1)
+            mean_hvi = np.array([
+                hypervolume(np.vstack([Ylog, m]), ref) - hv_now
+                if np.all(m < ref) else 0.0 for m in means])
+            top = np.argsort(-mean_hvi)[: max(8, n_candidates // 8)]
+            # stage 2: MC hypervolume-PoI on the shortlist
+            draws = np.stack([g.sample(Xc[top], n_draws, rng) for g in gps],
+                             axis=-1)                # (draws, top, n_obj)
+            prob = np.zeros(len(top))
+            gain = np.zeros(len(top))
+            for d in range(n_draws):
+                for c in range(len(top)):
+                    y_new = draws[d, c]
+                    if np.any(y_new >= ref):
+                        continue
+                    hv_new = hypervolume(np.vstack([Ylog, y_new]), ref)
+                    if hv_new > hv_now + 1e-12:
+                        prob[c] += 1.0
+                        gain[c] += hv_new - hv_now
+            prob /= n_draws
+            gain /= n_draws
+            # expected hypervolume improvement as the primary signal,
+            # probability-of-improvement as tie-break (Auger et al. family)
+            score = gain + 1e-3 * prob * (abs(hv_now) + 1e-9)
+            pick = cands[int(top[int(np.argmax(score))])]
+
+        y = np.array(objectives(pick), dtype=float)
+        configs.append(pick)
+        tried.add(pick.encode())
+        ys = np.vstack([ys, y[None, :]])
+        hv_history.append(hv_of(ys))
+
+    return DSEResult(configs, ys, hv_history, len(configs), ref)

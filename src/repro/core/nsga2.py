@@ -1,0 +1,135 @@
+"""NSGA-II baseline (paper §VII-C compares MOBO against it).
+
+Standard elitist non-dominated sorting GA [Deb et al. 2002]: fast
+non-dominated sort, crowding distance, binary tournament, uniform crossover
+and ordinal mutation over the hardware design space encoding.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .hw_space import HWSpace
+from .mobo import DSEResult, Objectives, _finite_rows
+from .pareto import default_reference, hypervolume
+
+
+def _fast_nondominated_sort(ys: np.ndarray) -> list[list[int]]:
+    n = len(ys)
+    S = [[] for _ in range(n)]
+    counts = np.zeros(n, dtype=int)
+    fronts: list[list[int]] = [[]]
+    for p in range(n):
+        for q in range(n):
+            if p == q:
+                continue
+            if np.all(ys[p] <= ys[q]) and np.any(ys[p] < ys[q]):
+                S[p].append(q)
+            elif np.all(ys[q] <= ys[p]) and np.any(ys[q] < ys[p]):
+                counts[p] += 1
+        if counts[p] == 0:
+            fronts[0].append(p)
+    i = 0
+    while fronts[i]:
+        nxt: list[int] = []
+        for p in fronts[i]:
+            for q in S[p]:
+                counts[q] -= 1
+                if counts[q] == 0:
+                    nxt.append(q)
+        i += 1
+        fronts.append(nxt)
+    return fronts[:-1]
+
+
+def _crowding(ys: np.ndarray, front: list[int]) -> dict[int, float]:
+    dist = {i: 0.0 for i in front}
+    if len(front) <= 2:
+        return {i: np.inf for i in front}
+    arr = ys[front]
+    for m in range(ys.shape[1]):
+        order = np.argsort(arr[:, m])
+        span = arr[order[-1], m] - arr[order[0], m] or 1.0
+        dist[front[order[0]]] = np.inf
+        dist[front[order[-1]]] = np.inf
+        for k in range(1, len(front) - 1):
+            dist[front[order[k]]] += (arr[order[k + 1], m]
+                                      - arr[order[k - 1], m]) / span
+    return dist
+
+
+def nsga2(space: HWSpace, objectives: Objectives, *, pop_size: int = 5,
+          n_trials: int = 20, seed: int = 0) -> DSEResult:
+    """Evaluate at most ``n_trials`` distinct design points (the paper caps
+    all methods by trial count — evaluations are the expensive resource)."""
+    rng = np.random.default_rng(seed)
+    configs = space.sample(rng, pop_size)
+    ys = np.array([objectives(c) for c in configs], dtype=float)
+    tried = {c.encode(): i for i, c in enumerate(configs)}
+
+    all_configs = list(configs)
+    all_ys = ys.copy()
+
+    fin = _finite_rows(all_ys)
+    base = all_ys[fin] if fin.any() else np.ones((1, all_ys.shape[1]))
+    ref = default_reference(np.log10(np.maximum(base, 1e-30)), margin=1.3)
+
+    def hv_of(y):
+        m = _finite_rows(y)
+        return hypervolume(np.log10(np.maximum(y[m], 1e-30)), ref) if m.any() else 0.0
+
+    hv_history = [0.0] * (len(all_configs) - 1) + [hv_of(all_ys)]
+
+    pop_idx = list(range(len(configs)))
+    while len(all_configs) < n_trials:
+        pys = all_ys[pop_idx]
+        fronts = _fast_nondominated_sort(pys)
+        rank = {}
+        crowd = {}
+        for r, f in enumerate(fronts):
+            c = _crowding(pys, f)
+            for i in f:
+                rank[i] = r
+                crowd[i] = c[i]
+
+        def tournament() -> int:
+            a, b = rng.integers(len(pop_idx)), rng.integers(len(pop_idx))
+            if rank.get(a, 0) != rank.get(b, 0):
+                return pop_idx[a] if rank.get(a, 0) < rank.get(b, 0) else pop_idx[b]
+            return pop_idx[a] if crowd.get(a, 0) >= crowd.get(b, 0) else pop_idx[b]
+
+        # produce offspring until we add one unseen point
+        child = None
+        for _ in range(64):
+            pa = all_configs[tournament()]
+            pb = all_configs[tournament()]
+            c = space.mutate(space.crossover(pa, pb, rng), rng)
+            if c.encode() not in tried:
+                child = c
+                break
+        if child is None:
+            extra = space.sample(rng, 1, exclude=set(tried))
+            if not extra:
+                break
+            child = extra[0]
+        y = np.array(objectives(child), dtype=float)
+        tried[child.encode()] = len(all_configs)
+        all_configs.append(child)
+        all_ys = np.vstack([all_ys, y[None, :]])
+        hv_history.append(hv_of(all_ys))
+
+        # environmental selection on the union
+        union = pop_idx + [len(all_configs) - 1]
+        uys = all_ys[union]
+        fronts = _fast_nondominated_sort(uys)
+        new_pop: list[int] = []
+        for f in fronts:
+            if len(new_pop) + len(f) <= pop_size:
+                new_pop += [union[i] for i in f]
+            else:
+                c = _crowding(uys, f)
+                rest = sorted(f, key=lambda i: -c[i])
+                new_pop += [union[i] for i in rest[: pop_size - len(new_pop)]]
+                break
+        pop_idx = new_pop
+
+    return DSEResult(all_configs, all_ys, hv_history, len(all_configs), ref)

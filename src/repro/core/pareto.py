@@ -1,0 +1,106 @@
+"""Pareto sets and the hypervolume indicator (paper §V-B, §VII-C).
+
+All objectives are *minimized*.  Hypervolume is measured against a reference
+point that every point must dominate; exact algorithms for 2-D and 3-D (the
+paper's latency/power/area case), Monte-Carlo fallback for higher dims.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dominates(a: np.ndarray, b: np.ndarray) -> bool:
+    """a dominates b (minimization): a <= b everywhere, < somewhere."""
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+def pareto_mask(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows."""
+    pts = np.asarray(points, dtype=float)
+    n = len(pts)
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        dominated = np.all(pts <= pts[i], axis=1) & np.any(pts < pts[i], axis=1)
+        if dominated.any():
+            mask[i] = False
+        else:
+            # i dominates others -> knock them out early
+            kills = np.all(pts[i] <= pts, axis=1) & np.any(pts[i] < pts, axis=1)
+            mask &= ~kills
+            mask[i] = True
+    return mask
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    pts = np.asarray(points, dtype=float)
+    return pts[pareto_mask(pts)]
+
+
+def _hv2d(front: np.ndarray, ref: np.ndarray) -> float:
+    """Exact 2-D hypervolume of a non-dominated front."""
+    pts = front[np.argsort(front[:, 0])]
+    hv, prev_y = 0.0, ref[1]
+    for x, y in pts:
+        if y < prev_y:
+            hv += (ref[0] - x) * (prev_y - y)
+            prev_y = y
+    return hv
+
+
+def _hv3d(front: np.ndarray, ref: np.ndarray) -> float:
+    """Exact 3-D hypervolume by sweeping the third axis (slab decomposition)."""
+    pts = front[np.argsort(front[:, 2])]
+    zs = np.concatenate([pts[:, 2], [ref[2]]])
+    hv = 0.0
+    for i in range(len(pts)):
+        dz = zs[i + 1] - zs[i]
+        if dz <= 0:
+            continue
+        # points active in this slab: z <= zs[i]
+        active = pts[pts[:, 2] <= zs[i]][:, :2]
+        if len(active):
+            fr = pareto_front(active)
+            hv += _hv2d(fr, ref[:2]) * dz
+    return hv
+
+
+def hypervolume(points: np.ndarray, ref: np.ndarray, mc_samples: int = 200_000,
+                seed: int = 0) -> float:
+    """Hypervolume of the Pareto front of ``points`` w.r.t. ``ref``."""
+    pts = np.asarray(points, dtype=float)
+    ref = np.asarray(ref, dtype=float)
+    if pts.ndim != 2 or len(pts) == 0:
+        return 0.0
+    # clip points that exceed the reference (contribute nothing)
+    keep = np.all(pts < ref, axis=1)
+    pts = pts[keep]
+    if len(pts) == 0:
+        return 0.0
+    front = pareto_front(pts)
+    d = front.shape[1]
+    if d == 1:
+        return float(ref[0] - front.min())
+    if d == 2:
+        return _hv2d(front, ref)
+    if d == 3:
+        return _hv3d(front, ref)
+    # Monte-Carlo fallback (deterministic seed)
+    rng = np.random.default_rng(seed)
+    lo = front.min(axis=0)
+    samples = rng.uniform(lo, ref, size=(mc_samples, d))
+    dominated = np.zeros(mc_samples, dtype=bool)
+    for p in front:
+        dominated |= np.all(samples >= p, axis=1)
+    box = float(np.prod(ref - lo))
+    return box * dominated.mean()
+
+
+def default_reference(points: np.ndarray, margin: float = 1.1) -> np.ndarray:
+    """A reference point slightly beyond the observed worst per objective."""
+    pts = np.asarray(points, dtype=float)
+    worst = pts.max(axis=0)
+    best = pts.min(axis=0)
+    span = np.where(worst > best, worst - best, np.abs(worst) + 1e-9)
+    return worst + (margin - 1.0) * span + 1e-12

@@ -1,0 +1,151 @@
+"""DQN revision policy for software DSE (paper §VI-B, Fig. 5(e)).
+
+"We use the DQN algorithm to train a 4-layer fully-connected neural network,
+which predicts Q-values.  The DQN is reused for all design points in a
+software space."  Implemented in pure JAX: a 4-layer MLP, a numpy replay
+buffer, epsilon-greedy action selection, TD(0) targets with a slow target
+network, Adam updates — all jitted and CPU-friendly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init_mlp(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (a, b)) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros(b)})
+    return params
+
+
+def _forward(params, x):
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    last = params[-1]
+    return h @ last["w"] + last["b"]
+
+
+@partial(jax.jit, static_argnames=())
+def _td_loss(params, target_params, s, a, r, s2, done, gamma):
+    q = _forward(params, s)
+    q_sa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    q_next = jnp.max(_forward(target_params, s2), axis=1)
+    target = r + gamma * q_next * (1.0 - done)
+    return jnp.mean((q_sa - jax.lax.stop_gradient(target)) ** 2)
+
+
+@jax.jit
+def _adam_step(params, grads, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** t)
+        vh = v2 / (1 - b2 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+_grad_loss = jax.jit(jax.grad(_td_loss))
+
+
+@dataclass
+class Replay:
+    capacity: int
+    s: np.ndarray = None
+    a: np.ndarray = None
+    r: np.ndarray = None
+    s2: np.ndarray = None
+    done: np.ndarray = None
+    n: int = 0
+    ptr: int = 0
+
+    def add(self, s, a, r, s2, done):
+        if self.s is None:
+            d = len(s)
+            self.s = np.zeros((self.capacity, d), np.float32)
+            self.s2 = np.zeros((self.capacity, d), np.float32)
+            self.a = np.zeros(self.capacity, np.int32)
+            self.r = np.zeros(self.capacity, np.float32)
+            self.done = np.zeros(self.capacity, np.float32)
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i], self.s2[i], self.done[i] = \
+            s, a, r, s2, float(done)
+        self.ptr = (i + 1) % self.capacity
+        self.n = min(self.n + 1, self.capacity)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.n, size=batch)
+        return (self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
+                self.done[idx])
+
+
+class DQN:
+    """4-layer MLP Q-network with target network and replay."""
+
+    def __init__(self, n_features: int, n_actions: int, hidden: int = 64,
+                 gamma: float = 0.9, seed: int = 0, buffer: int = 4096):
+        key = jax.random.PRNGKey(seed)
+        sizes = (n_features, hidden, hidden, hidden, n_actions)
+        self.params = _init_mlp(key, sizes)
+        self.target_params = jax.tree_util.tree_map(lambda x: x, self.params)
+        self.m = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.v = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.t = 0
+        self.gamma = gamma
+        self.n_actions = n_actions
+        self.replay = Replay(buffer)
+        self.rng = np.random.default_rng(seed)
+        self.eps = 1.0
+        self.eps_min = 0.05
+        self.eps_decay = 0.97
+
+    def q_values(self, feat: np.ndarray) -> np.ndarray:
+        return np.asarray(_forward(self.params, jnp.asarray(feat[None, :])))[0]
+
+    def select(self, feat: np.ndarray) -> int:
+        """Epsilon-greedy revision choice (the paper applies the highest-Q
+        revision to the candidate)."""
+        if self.rng.random() < self.eps:
+            return int(self.rng.integers(self.n_actions))
+        return int(np.argmax(self.q_values(feat)))
+
+    def record(self, s, a, r, s2, done=False):
+        self.replay.add(np.asarray(s, np.float32), a, r,
+                        np.asarray(s2, np.float32), done)
+
+    def train_step(self, batch: int = 32):
+        if self.replay.n < batch:
+            return None
+        s, a, r, s2, done = self.replay.sample(self.rng, batch)
+        self.t += 1
+        grads = _grad_loss(self.params, self.target_params,
+                           jnp.asarray(s), jnp.asarray(a), jnp.asarray(r),
+                           jnp.asarray(s2), jnp.asarray(done),
+                           self.gamma)
+        self.params, self.m, self.v = _adam_step(
+            self.params, grads, self.m, self.v, float(self.t))
+        if self.t % 25 == 0:
+            self.target_params = jax.tree_util.tree_map(
+                lambda x: x, self.params)
+        self.eps = max(self.eps_min, self.eps * self.eps_decay)
+        return float(_td_loss(self.params, self.target_params,
+                              jnp.asarray(s), jnp.asarray(a), jnp.asarray(r),
+                              jnp.asarray(s2), jnp.asarray(done), self.gamma))

@@ -1,0 +1,28 @@
+"""Random-search baseline for the hardware DSE comparison (paper §VII-C)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .hw_space import HWSpace
+from .mobo import DSEResult, Objectives, _finite_rows
+from .pareto import default_reference, hypervolume
+
+
+def random_search(space: HWSpace, objectives: Objectives, *,
+                  n_trials: int = 20, seed: int = 0) -> DSEResult:
+    rng = np.random.default_rng(seed)
+    configs = space.sample(rng, n_trials)
+    ys = np.array([objectives(c) for c in configs], dtype=float)
+
+    fin = _finite_rows(ys)
+    base = ys[fin] if fin.any() else np.ones((1, ys.shape[1]))
+    ref = default_reference(np.log10(np.maximum(base, 1e-30)), margin=1.3)
+
+    hv_history = []
+    for i in range(1, len(configs) + 1):
+        sub = ys[:i]
+        m = _finite_rows(sub)
+        hv_history.append(
+            hypervolume(np.log10(np.maximum(sub[m], 1e-30)), ref)
+            if m.any() else 0.0)
+    return DSEResult(configs, ys, hv_history, len(configs), ref)

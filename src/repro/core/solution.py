@@ -1,0 +1,63 @@
+"""Solution registry: persisted co-design outputs consumed by the framework.
+
+The HASCO flow produces (accelerator config, per-workload schedules); the
+training/serving framework consumes the accelerator config as the *tuned
+Pallas kernel configuration* (block shapes, pipeline depth) — this is how the
+paper's technique becomes a first-class feature of the framework
+(DESIGN.md §2: the co-designed "hardware" is the kernel resource envelope).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict
+from pathlib import Path
+
+from .codesign import Solution
+from .hw_primitives import HWConfig
+
+DEFAULT_PATH = Path("artifacts/solutions.json")
+
+
+def save(app: str, sol: Solution, path: Path | str = DEFAULT_PATH) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data[app] = {
+        "hw": asdict(sol.hw),
+        "intrinsic": sol.intrinsic,
+        "latency_s": sol.latency_s,
+        "power_w": sol.power_w,
+        "area_um2": sol.area_um2,
+        "schedules": {
+            w: {"tiles": list(map(list, s.tiles)), "order": list(s.order),
+                "fuse_outer": s.fuse_outer,
+                "index_map": list(map(list, s.choice.index_map))}
+            for w, s in sol.schedules.items()},
+    }
+    path.write_text(json.dumps(data, indent=2, sort_keys=True))
+
+
+def load_hw(app: str, path: Path | str = DEFAULT_PATH) -> HWConfig | None:
+    path = Path(path)
+    if not path.exists():
+        return None
+    data = json.loads(path.read_text())
+    if app not in data:
+        return None
+    return HWConfig(**data[app]["hw"])
+
+
+def kernel_blocks(app: str, path: Path | str = DEFAULT_PATH,
+                  default: tuple[int, int, int] = (256, 256, 512)
+                  ) -> tuple[int, int, int]:
+    """Tuned (bm, bn, bk) Pallas block shape for the app's GEMM kernel,
+    clamped to MXU-legal multiples."""
+    hw = load_hw(app, path)
+    if hw is None:
+        return default
+
+    def legal(x: int, lane: int) -> int:
+        return max(lane, (x // lane) * lane)
+
+    return (legal(hw.pe_rows, 8), legal(hw.pe_cols, 128),
+            legal(hw.pe_depth, 128))

@@ -1,0 +1,76 @@
+"""Gaussian-process surrogate for MOBO (paper §V-B: "we use a Gaussian
+Process as the surrogate model").
+
+Pure-numpy GP regression with an RBF kernel.  Lengthscale/noise are selected
+by maximizing the log marginal likelihood over a small deterministic grid —
+cheap, robust, and good enough for the ≤ a-few-hundred observations a DSE run
+produces.  One independent GP per objective (standard MOBO practice).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rbf(a: np.ndarray, b: np.ndarray, ls: float) -> np.ndarray:
+    d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+    return np.exp(-0.5 * d2 / (ls * ls))
+
+
+class GP:
+    """GP regression on inputs normalized to [0,1]^d, standardized targets."""
+
+    def __init__(self, lengthscales=(0.1, 0.2, 0.5, 1.0),
+                 noises=(1e-6, 1e-4, 1e-2)):
+        self._ls_grid = lengthscales
+        self._noise_grid = noises
+        self._fitted = False
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GP":
+        X = np.asarray(X, dtype=float)
+        y = np.asarray(y, dtype=float).ravel()
+        self.X = X
+        self.y_mean = float(y.mean())
+        self.y_std = float(y.std()) or 1.0
+        yn = (y - self.y_mean) / self.y_std
+
+        best = (-np.inf, None, None, None)
+        n = len(X)
+        for ls in self._ls_grid:
+            K0 = _rbf(X, X, ls)
+            for noise in self._noise_grid:
+                K = K0 + noise * np.eye(n)
+                try:
+                    L = np.linalg.cholesky(K)
+                except np.linalg.LinAlgError:
+                    continue
+                alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+                # log marginal likelihood
+                lml = (-0.5 * yn @ alpha - np.log(np.diag(L)).sum()
+                       - 0.5 * n * np.log(2 * np.pi))
+                if lml > best[0]:
+                    best = (lml, ls, L, alpha)
+        if best[1] is None:  # pathological; fall back to heavy noise
+            K = _rbf(X, X, 1.0) + 1e-1 * np.eye(n)
+            L = np.linalg.cholesky(K)
+            alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
+            best = (0.0, 1.0, L, alpha)
+        _, self.ls, self.L, self.alpha = best
+        self._fitted = True
+        return self
+
+    def predict(self, Xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Posterior mean and variance at ``Xs`` (de-standardized)."""
+        assert self._fitted
+        Xs = np.asarray(Xs, dtype=float)
+        Ks = _rbf(self.X, Xs, self.ls)             # (n, m)
+        mean = Ks.T @ self.alpha
+        v = np.linalg.solve(self.L, Ks)            # (n, m)
+        var = np.clip(1.0 - (v * v).sum(axis=0), 1e-12, None)
+        return (mean * self.y_std + self.y_mean, var * self.y_std ** 2)
+
+    def sample(self, Xs: np.ndarray, n_draws: int,
+               rng: np.random.Generator) -> np.ndarray:
+        """Independent-marginal posterior draws, shape (n_draws, m)."""
+        mean, var = self.predict(Xs)
+        return mean[None, :] + np.sqrt(var)[None, :] * rng.standard_normal(
+            (n_draws, len(mean)))

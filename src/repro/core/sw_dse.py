@@ -1,0 +1,116 @@
+"""Software DSE driver (paper §VI-B, Fig. 5(a)):
+
+  initialize a candidate pool of random primitive sequences  →  repeat:
+  heuristic top-k picks valuable candidates  →  Q-learning picks the most
+  promising revision choice per candidate  →  evaluate, learn, iterate.
+
+The DQN is shared across all design points of one software space (paper).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .heuristic import top_k
+from .hw_primitives import HWConfig
+from .matching import TensorizeChoice
+from .qlearning import DQN
+from .sw_primitives import Schedule
+from .sw_space import SoftwareSpace
+from .tst import TensorExpr
+
+
+@dataclass
+class SWResult:
+    schedule: Schedule
+    latency_s: float
+    evaluations: int
+    history: list[float] = field(default_factory=list)  # best-so-far curve
+
+
+def optimize(workload: TensorExpr, choices: list[TensorizeChoice],
+             hw: HWConfig, *, target: str = "spatial", pool_size: int = 24,
+             rounds: int = 12, k: int = 6, seed: int = 0,
+             dqn: DQN | None = None, use_qlearning: bool = True) -> SWResult:
+    """Find a low-latency schedule for one workload on one accelerator."""
+    space = SoftwareSpace(workload, choices, hw, target)
+    rng = np.random.default_rng(seed)
+
+    pool: list[Schedule] = [space.default_schedule()]
+    pool += [space.random_schedule(rng) for _ in range(pool_size - 1)]
+    lat = [space.latency(s) for s in pool]
+    evals = len(pool)
+    history = [min(lat)]
+
+    if use_qlearning and dqn is None:
+        dqn = DQN(space.n_features, len(space.moves), seed=seed)
+
+    for _ in range(rounds):
+        chosen = top_k(pool, lat, k)
+        best = min(lat)
+        for i in chosen:
+            s = pool[i]
+            feat = space.features(s)
+            if use_qlearning:
+                a = dqn.select(feat)
+            else:
+                a = int(rng.integers(len(space.moves)))
+            s2 = space.apply(s, space.moves[a], rng)
+            l2 = space.latency(s2)
+            evals += 1
+            if use_qlearning:
+                # reward: relative improvement over the revised candidate
+                if math.isfinite(l2) and math.isfinite(lat[i]) and lat[i] > 0:
+                    r = float(np.clip((lat[i] - l2) / lat[i], -1.0, 1.0))
+                else:
+                    r = -1.0 if not math.isfinite(l2) else 0.0
+                dqn.record(feat, a, r, space.features(s2))
+                dqn.train_step()
+            pool.append(s2)
+            lat.append(l2)
+        # keep the pool bounded: retain the most valuable half + fresh random
+        keep = top_k(pool, lat, max(pool_size // 2, k))
+        pool = [pool[i] for i in keep]
+        lat = [lat[i] for i in keep]
+        while len(pool) < pool_size:
+            s = space.random_schedule(rng)
+            pool.append(s)
+            lat.append(space.latency(s))
+            evals += 1
+        history.append(min(lat))
+
+    best_i = int(np.argmin(lat))
+    return SWResult(pool[best_i], lat[best_i], evals, history)
+
+
+def optimize_set(workloads: list[TensorExpr],
+                 partition: dict[tuple[str, str], list[TensorizeChoice]],
+                 hw: HWConfig, *, target: str = "spatial", seed: int = 0,
+                 budget: str = "small",
+                 dqn: DQN | None = None) -> dict[str, SWResult]:
+    """Per-workload schedules on a shared accelerator (paper §III: one
+    accelerator per application, one program per workload)."""
+    sizes = {"small": dict(pool_size=12, rounds=4, k=4),
+             "full": dict(pool_size=24, rounds=12, k=6)}[budget]
+    out: dict[str, SWResult] = {}
+    shared_dqn = dqn
+    for n, w in enumerate(workloads):
+        choices = partition.get((w.name, hw.intrinsic), [])
+        if not choices:
+            continue
+        if shared_dqn is None:
+            space = SoftwareSpace(w, choices, hw, target)
+            shared_dqn = DQN(space.n_features, len(space.moves), seed=seed)
+        out[w.name] = optimize(w, choices, hw, target=target,
+                               seed=seed + 17 * n, dqn=shared_dqn, **sizes)
+    return out
+
+
+def total_latency(results: dict[str, SWResult]) -> float:
+    """Application latency: the sum over workloads (paper Table III runs
+    whole CNNs through one accelerator)."""
+    if not results:
+        return math.inf
+    return sum(r.latency_s for r in results.values())

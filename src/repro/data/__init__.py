@@ -1,0 +1,6 @@
+"""Data substrate: deterministic synthetic token pipeline, multi-host aware
+sharded batching with background prefetch."""
+
+from .pipeline import SyntheticLM, make_global_batch
+
+__all__ = ["SyntheticLM", "make_global_batch"]

@@ -1,0 +1,8 @@
+"""Distribution substrate: sharding helpers, pipeline parallelism, and
+collective utilities over the (pod, data, model) production mesh."""
+
+from .sharding import (batch_specs, cache_shardings, named, param_shardings,
+                       prune_specs)
+
+__all__ = ["batch_specs", "cache_shardings", "named", "param_shardings",
+           "prune_specs"]

@@ -1,0 +1,65 @@
+"""Activation-sharding context (sequence parallelism, DESIGN.md §6).
+
+The residual stream between blocks is what scan saves for the backward pass;
+left unconstrained it is replicated over the 'model' axis and dominates HBM
+(dry-run probe: deepseek-67b ≈ 100 GB/device).  Constraining it to
+P((pod, data), 'model', None) — sequence-sharded over TP — makes GSPMD insert
+the classic SP all-gather/reduce-scatter pairs and cuts saved activations by
+the TP degree.
+
+Model code calls ``constrain_activations(x)``; launchers opt in via
+``set_activation_spec``.  Smoke tests (1-device mesh) leave it unset.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_SPEC: P | None = None
+_AXES: tuple[str, ...] | None = None
+
+
+def set_activation_spec(spec: P | None, mesh=None) -> None:
+    """Install the residual-stream constraint; with ``mesh`` given, axes the
+    mesh does not have are pruned (single-pod meshes lack 'pod')."""
+    global _SPEC, _AXES
+    if mesh is not None:
+        _AXES = tuple(mesh.axis_names)
+    if spec is None:
+        _AXES = None
+    elif mesh is not None:
+        from .sharding import prune_specs
+        spec = prune_specs(spec, mesh)
+    _SPEC = spec
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """Generic pruned sharding constraint for internal activations (MoE
+    dispatch buffers etc.).  No-op unless a launcher enabled sharding."""
+    if _AXES is None:
+        return x
+    from .sharding import prune_specs
+    return jax.lax.with_sharding_constraint(x, prune_specs(spec, _mesh_like()))
+
+
+class _mesh_like:
+    """Duck-typed mesh stand-in carrying only axis_names for prune_specs."""
+
+    @property
+    def axis_names(self):
+        return _AXES
+
+
+def get_activation_spec() -> P | None:
+    return _SPEC
+
+
+def constrain_activations(x: jax.Array) -> jax.Array:
+    """Apply the context spec to a (B, S, D) residual-stream activation.
+    No-op when unset or when the sequence dim cannot shard (decode, S=1)."""
+    if _SPEC is None or x.ndim != 3 or x.shape[1] == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, _SPEC)
+
+
+DEFAULT_TRAIN_SPEC = P(("pod", "data"), "model", None)

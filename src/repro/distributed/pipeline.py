@@ -1,0 +1,65 @@
+"""Pipeline parallelism (optional axis, DESIGN.md §6).
+
+GPipe-style microbatched pipeline over a 'stage' mesh axis using shard_map +
+collective_permute: stage s holds its own layer slice; microbatches stream
+stage-to-stage; the bubble is the classic (S−1)/(M+S−1).  The production
+dry-run mesh spends its axes on (pod, data, model); this module exists so the
+framework *supports* PP — exercised by tests on a small stage mesh and usable
+via a 'stage' axis on real hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(layer_fn, params_stacked, x, *, mesh: Mesh,
+                   axis: str = "stage", n_microbatches: int | None = None):
+    """Run ``y = layer_fn(stage_params, x)`` through S pipeline stages.
+
+    params_stacked: pytree with leading dim S (one slice per stage), sharded
+    over ``axis``; x: (B, ...) batch, split into M microbatches (default S).
+    Returns the pipelined output, replicated across stages.
+    """
+    s = mesh.shape[axis]
+    m = n_microbatches or s
+    b = x.shape[0]
+    assert b % m == 0, (b, m)
+    x_mb = x.reshape(m, b // m, *x.shape[1:])
+
+    def stage_body(params, xs):
+        params = jax.tree_util.tree_map(lambda p: p[0], params)
+        idx = jax.lax.axis_index(axis)
+        n_ticks = m + s - 1
+
+        def tick(carry, t):
+            inp, outputs = carry
+            # stage 0 ingests fresh microbatch t; later stages take the wire
+            fresh = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, m - 1), axis=0, keepdims=False)
+            cur = jnp.where(idx == 0, fresh, inp)
+            y = layer_fn(params, cur)
+            # last stage emits microbatch t-(s-1) at tick t
+            mb_out = t - (s - 1)
+            upd = jax.lax.dynamic_update_index_in_dim(
+                outputs, y, jnp.clip(mb_out, 0, m - 1), axis=0)
+            emit = (idx == s - 1) & (mb_out >= 0)
+            outputs = jnp.where(emit, upd, outputs)
+            # stream s -> s+1
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % s) for i in range(s)])
+            return (nxt, outputs), None
+
+        carry0 = (jnp.zeros_like(xs[0]), jnp.zeros_like(xs))
+        (_, outputs), _ = jax.lax.scan(tick, carry0, jnp.arange(n_ticks))
+        # only the last stage holds real outputs; replicate via psum
+        outputs = jnp.where(idx == s - 1, outputs, jnp.zeros_like(outputs))
+        return jax.lax.psum(outputs, axis)
+
+    fn = shard_map(stage_body, mesh=mesh,
+                   in_specs=(P(axis), P()), out_specs=P(),
+                   check_rep=False)
+    out = fn(params_stacked, x_mb)
+    return out.reshape(b, *x.shape[1:])

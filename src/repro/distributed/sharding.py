@@ -1,0 +1,82 @@
+"""Sharding rules for the production mesh (DESIGN.md §6).
+
+Model code annotates params/caches with PartitionSpecs over logical axes
+('pod', 'data', 'model'); these helpers adapt the specs to whatever mesh the
+job actually brings up (e.g. a single-pod mesh has no 'pod' axis; smoke tests
+run on a 1-device mesh) and wrap them into NamedShardings.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _filter_axes(entry, axis_names: tuple[str, ...]):
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in axis_names else None
+    kept = tuple(a for a in entry if a in axis_names)
+    return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+
+def prune_specs(tree, mesh: Mesh):
+    """Drop mesh axes the current mesh does not have from every spec."""
+    names = tuple(mesh.axis_names)
+
+    def prune(spec: P) -> P:
+        return P(*(_filter_axes(e, names) for e in spec))
+
+    return jax.tree_util.tree_map(prune, tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def named(tree, mesh: Mesh):
+    """PartitionSpec tree -> NamedSharding tree (pruned to the mesh)."""
+    pruned = prune_specs(tree, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pruned,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(model_module, cfg, mesh: Mesh):
+    return named(model_module.specs(cfg), mesh)
+
+
+def zero1_specs(tree):
+    """ZeRO-1 parameter specs: drop the 'data' (FSDP) axis from parameters —
+    weights become TP-only (replicated over data), while optimizer moments
+    keep the original fully-sharded specs.  Trades per-layer weight
+    all-gathers for one gradient all-reduce + one post-update param
+    all-gather (EXPERIMENTS.md §Perf, qwen3 train hillclimb)."""
+    def strip(entry):
+        if entry == "data":
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a != "data")
+            return kept if len(kept) > 1 else (kept[0] if kept else None)
+        return entry
+
+    def one(spec: P) -> P:
+        return P(*(strip(e) for e in spec))
+
+    return jax.tree_util.tree_map(one, tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_shardings(model_module, cfg, mesh: Mesh):
+    return named(model_module.cache_specs(cfg), mesh)
+
+
+def batch_specs(cfg) -> dict[str, P]:
+    """Input specs: batch dim over (pod, data)."""
+    b = ("pod", "data")
+    if cfg.embed_inputs:
+        return {"frames": P(b, None, None), "labels": P(b, None)}
+    if cfg.vis_tokens:
+        return {"tokens": P(b, None), "patches": P(b, None, None),
+                "labels": P(b, None)}
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,7 @@
+"""Fault tolerance: atomic/elastic checkpointing, heartbeat watchdog with
+straggler detection, restartable training driver support."""
+
+from .checkpoint import CheckpointManager
+from .watchdog import Watchdog
+
+__all__ = ["CheckpointManager", "Watchdog"]

@@ -1,0 +1,82 @@
+"""Heartbeat watchdog: node-failure and straggler detection.
+
+On a real cluster each host runs ``beat()`` per step; the (replicated)
+controller calls ``check()`` to classify workers as healthy / straggler /
+dead and decides mitigation:
+
+  * dead worker        -> restart from the latest checkpoint, possibly on a
+                          smaller mesh (elastic: CheckpointManager reshards);
+  * straggler          -> first re-dispatch its shard (backup-task policy);
+                          repeated offenders are cordoned.
+
+The control logic is deterministic and fully unit-tested; the container has
+one host, so launch/train.py exercises it with simulated failures
+(--inject-failure-at).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class WorkerState:
+    last_beat: float
+    last_step: int
+    slow_count: int = 0
+    cordoned: bool = False
+
+
+@dataclass
+class Watchdog:
+    n_workers: int
+    dead_after_s: float = 60.0
+    straggler_factor: float = 2.0   # slower than factor x median step time
+    cordon_after: int = 3
+    workers: dict[int, WorkerState] = field(default_factory=dict)
+    step_times: list[float] = field(default_factory=list)
+
+    def beat(self, worker: int, step: int, now: float | None = None,
+             step_time_s: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        st = self.workers.setdefault(worker, WorkerState(now, step))
+        st.last_beat, st.last_step = now, step
+        if step_time_s is not None:
+            self.step_times.append(step_time_s)
+            med = self.median_step_time()
+            if med != float("inf") and step_time_s > self.straggler_factor * med:
+                st.slow_count += 1
+                if st.slow_count >= self.cordon_after:
+                    st.cordoned = True
+            else:
+                st.slow_count = 0
+
+    def median_step_time(self) -> float:
+        if not self.step_times:
+            return float("inf")
+        s = sorted(self.step_times[-256:])
+        return s[len(s) // 2]
+
+    def check(self, now: float | None = None) -> dict[str, list[int]]:
+        now = time.monotonic() if now is None else now
+        dead, stragglers, cordoned = [], [], []
+        for w in range(self.n_workers):
+            st = self.workers.get(w)
+            if st is None or now - st.last_beat > self.dead_after_s:
+                dead.append(w)
+            elif st.cordoned:
+                cordoned.append(w)
+            elif st.slow_count > 0:
+                stragglers.append(w)
+        return {"dead": dead, "stragglers": stragglers, "cordoned": cordoned}
+
+    def healthy_mesh_size(self, total: int, now: float | None = None) -> int:
+        """Largest power-of-two worker count available after failures —
+        the elastic-restart target size."""
+        health = self.check(now=now)
+        bad = set(health["dead"]) | set(health["cordoned"])
+        avail = total - len([w for w in bad if w < total])
+        size = 1
+        while size * 2 <= avail:
+            size *= 2
+        return size

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the performance-critical compute layers, each with
+a pure-jnp oracle in ``ref.py`` and jit'd dispatch in ``ops.py``.
+
+  gemm / gemv / dotprod / conv2d — the paper's four hardware intrinsics
+  flash_attention               — fused attention (softcap, local window, GQA)
+  rwkv6                         — chunked linear-attention WKV (Finch)
+  mamba2                        — chunked SSD scan
+"""
+
+from . import ops, ref
+from .conv2d import conv2d
+from .dotprod import dot
+from .flash_attention import flash_attention
+from .gemm import gemm
+from .gemv import gemv
+from .mamba2 import mamba2
+from .rwkv6 import rwkv6
+
+__all__ = ["conv2d", "dot", "flash_attention", "gemm", "gemv", "mamba2",
+           "ops", "ref", "rwkv6"]

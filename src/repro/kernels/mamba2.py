@@ -1,0 +1,108 @@
+"""Chunked Mamba-2 SSD Pallas kernel.
+
+Scalar-per-head decay makes the chunked form pure MXU work (unlike RWKV-6's
+per-channel decay): the (L, L) intra-chunk decay mask multiplies a C·Bᵀ
+Gram matrix.  All exponents are non-positive — numerically stable.
+
+Per chunk (la = inclusive cumsum of log-decay a):
+  y_t    = (c_t e^{la_t})·h0 + Σ_{s≤t} e^{la_t−la_s} (c_t·b_s) x_s
+  h_new  = e^{la_L} h0 + Σ_s e^{la_L−la_s} b_s x_sᵀ
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba2_kernel(x_ref, a_ref, b_ref, c_ref, h0_ref,
+                   y_ref, hT_ref, state_ref, *, chunk: int, n_t: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)               # (L, P)
+    a = a_ref[0].astype(jnp.float32)               # (1, L) log-decay <= 0
+    b = b_ref[0].astype(jnp.float32)               # (L, N)
+    c = c_ref[0].astype(jnp.float32)               # (L, N)
+
+    la = jnp.cumsum(a[0])                          # (L,), inclusive
+    h0 = state_ref[...]                            # (N, P)
+
+    # inter-chunk
+    y = jnp.dot(c * jnp.exp(la)[:, None], h0,
+                preferred_element_type=jnp.float32)
+
+    # intra-chunk (inclusive diagonal: y_t uses h_t after its own update)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(si <= ti,
+                      jnp.exp(jnp.minimum(la[:, None] - la[None, :], 0.0)),
+                      0.0)
+    gram = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * decay
+    y += jnp.dot(gram, x, preferred_element_type=jnp.float32)
+
+    # state update
+    bd = b * jnp.exp(la[-1] - la)[:, None]
+    state_ref[...] = jnp.exp(la[-1]) * h0 + jnp.dot(
+        bd.T, x, preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(t == n_t - 1)
+    def _flush():
+        hT_ref[0] = state_ref[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+           state: jax.Array | None = None, *, chunk: int = 64,
+           interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, H, P); a: (B, T, H) log-decay; b/c: (B, T, H, N);
+    state: (B, H, N, P) or None.  Returns (y (B,T,H,P), final state)."""
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, f"T={t} must be a multiple of chunk={chunk}"
+    if state is None:
+        state = jnp.zeros((bs, h, n, p), jnp.float32)
+
+    def flat(z):
+        return jnp.moveaxis(z, 2, 1).reshape(bs * h, t, z.shape[-1])
+
+    xf, bf, cf = flat(x), flat(b), flat(c)
+    af = jnp.moveaxis(a, 2, 1).reshape(bs * h, 1, t)
+    h0 = state.reshape(bs * h, n, p)
+
+    n_t = t // chunk
+    grid = (bs * h, n_t)
+    y, hT = pl.pallas_call(
+        functools.partial(_mamba2_kernel, chunk=chunk, n_t=n_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bh, tt: (bh, 0, tt)),
+            pl.BlockSpec((1, chunk, n), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, n, p), lambda bh, tt: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, tt: (bh, tt, 0)),
+            pl.BlockSpec((1, n, p), lambda bh, tt: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs * h, t, p), x.dtype),
+            jax.ShapeDtypeStruct((bs * h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xf, af, bf, cf, h0)
+
+    out = jnp.moveaxis(y.reshape(bs, h, t, p), 1, 2)
+    return out, hT.reshape(bs, h, n, p)

@@ -1,0 +1,107 @@
+"""Jit'd dispatch wrappers for all kernels.
+
+Every op takes ``implementation``: 'pallas' (the TPU kernel; on this CPU
+container only via interpret=True), 'interpret' (Pallas interpreter —
+correctness path used by tests), or 'xla' (pure-jnp reference semantics,
+used by the dry-run so cost_analysis sees XLA-native HLO).  Block shapes
+default to the HASCO-tuned values from the solution registry when available.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import conv2d as _conv2d
+from . import dotprod as _dotprod
+from . import flash_attention as _flash
+from . import gemm as _gemm
+from . import gemv as _gemv
+from . import mamba2 as _mamba2
+from . import ref
+from . import rwkv6 as _rwkv6
+
+IMPLEMENTATIONS = ("pallas", "interpret", "xla")
+
+
+def _mode(implementation: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if implementation == "pallas":
+        return True, False
+    if implementation == "interpret":
+        return True, True
+    if implementation == "xla":
+        return False, False
+    raise ValueError(f"implementation must be one of {IMPLEMENTATIONS}")
+
+
+def matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 512,
+           implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        return ref.gemm_ref(a, b)
+    return _gemm.gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=interp)
+
+
+def matvec(a, x, *, bm: int = 512, bk: int = 512,
+           implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        return ref.gemv_ref(a, x)
+    return _gemv.gemv(a, x, bm=bm, bk=bk, interpret=interp)
+
+
+def dot(a, b, *, bk: int = 2048, implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        return ref.dot_ref(a, b)
+    return _dotprod.dot(a, b, bk=bk, interpret=interp)
+
+
+def conv2d(a, w, *, bk: int = 128, implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        return ref.conv2d_ref(a, w)
+    return _conv2d.conv2d(a, w, bk=bk, interpret=interp)
+
+
+def attention(q, k, v, *, causal: bool = True, softcap: float = 0.0,
+              window: int = 0, scale: float | None = None,
+              bq: int = 128, bkv: int = 128, implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        # chunked online-softmax with flash-style custom VJP:
+        # O(S·chunk) memory forward AND backward, same semantics/FLOPs
+        from . import xla_attention
+        return xla_attention.attention(
+            q, k, v, causal=causal, softcap=softcap, window=window,
+            scale=scale)
+    return _flash.flash_attention(q, k, v, causal=causal, softcap=softcap,
+                                  window=window, scale=scale, bq=bq,
+                                  bkv=bkv, interpret=interp)
+
+
+def rwkv6(r, k, v, w, u, state=None, *, chunk: int = 16,
+          implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        from . import xla_linear
+        return xla_linear.rwkv6(r, k, v, w, u, state)
+    return _rwkv6.rwkv6(r, k, v, w, u, state, chunk=chunk, interpret=interp)
+
+
+def mamba2(x, a, b, c, state=None, *, chunk: int = 64,
+           implementation: str = "xla"):
+    use_pallas, interp = _mode(implementation)
+    if not use_pallas:
+        from . import xla_linear
+        return xla_linear.mamba2(x, a, b, c, state)
+    return _mamba2.mamba2(x, a, b, c, state, chunk=chunk, interpret=interp)
+
+
+def tuned_matmul(a, b, app: str = "default", implementation: str = "xla"):
+    """GEMM with HASCO-tuned block shapes from the solution registry —
+    the paper's technique as a first-class framework feature."""
+    from repro.core.solution import kernel_blocks
+
+    bm, bn, bk = kernel_blocks(app)
+    return matmul(a, b, bm=bm, bn=bn, bk=bk, implementation=implementation)

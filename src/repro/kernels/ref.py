@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantic ground truth: simple, obviously-correct, unfused
+implementations that the kernel tests sweep shapes/dtypes against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[m,n] = sum_k A[m,k] B[k,n], f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def gemv_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y[m] = sum_k A[m,k] x[k]."""
+    return (a.astype(jnp.float32) @ x.astype(jnp.float32)).astype(a.dtype)
+
+
+def dot_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Scalar dot product, f32 accumulation, returned as shape (1, 1)."""
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32)
+                   ).reshape(1, 1)
+
+
+def conv2d_ref(a: jax.Array, w: jax.Array) -> jax.Array:
+    """C[k,x,y] = sum_{c,r,s} A[c,x+r,y+s] W[k,c,r,s] ('valid' conv,
+    the paper's CONV2D intrinsic semantics)."""
+    a4 = a[None].astype(jnp.float32)              # (1, C, H, W)
+    w4 = w.astype(jnp.float32)                    # (K, C, R, S)
+    out = jax.lax.conv_general_dilated(
+        a4, w4, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0].astype(a.dtype)                 # (K, X, Y)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, softcap: float = 0.0,
+                  window: int = 0, scale: float | None = None) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) with H % Hkv == 0 (GQA).
+    ``softcap``: gemma2 logit soft-capping  cap*tanh(logits/cap).
+    ``window``: >0 = local (sliding-window) attention of that width.
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert h % hkv == 0
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)   # align cache offsets
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, state: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 (Finch) WKV oracle — strict sequential recurrence.
+
+    r/k: (B, T, H, Dk); v: (B, T, H, Dv); w: (B, T, H, Dk) per-channel
+    data-dependent log-decay (w <= 0, decay = exp(w)); u: (H, Dk) bonus.
+    state: (B, H, Dk, Dv).  Returns (out (B,T,H,Dv), final state).
+
+      o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T) ;  S_t = diag(e^{w_t}) S_{t-1} + k_t v_t^T
+    """
+    b, t, h, dk = k.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp          # (B,H,Dk),(B,H,Dk),(B,H,Dv),(B,H,Dk)
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,Dk,Dv)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s = jnp.exp(wt)[..., None] * s + kv
+        return s, ot
+
+    ins = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    final, outs = jax.lax.scan(step, state, ins)
+    return jnp.moveaxis(outs, 0, 1).astype(v.dtype), final
+
+
+def mamba2_ref(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+               state: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD oracle — sequential recurrence.
+
+    x: (B, T, H, P) head inputs; a: (B, T, H) per-head log-decay (<= 0);
+    b/c: (B, T, H, N) input/output projections (N = ssm state size).
+    state: (B, H, N, P).  Returns (y (B,T,H,P), final state).
+
+      h_t = e^{a_t} h_{t-1} + b_t x_t^T ;  y_t = c_t^T h_t
+    """
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    if state is None:
+        state = jnp.zeros((bs, h, n, p), jnp.float32)
+    xf, bf, cf = (z.astype(jnp.float32) for z in (x, b, c))
+    af = a.astype(jnp.float32)
+
+    def step(s, inp):
+        xt, at, bt, ct = inp
+        s = jnp.exp(at)[..., None, None] * s \
+            + bt[..., :, None] * xt[..., None, :]
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, yt
+
+    ins = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0),
+           jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    final, ys = jax.lax.scan(step, state, ins)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

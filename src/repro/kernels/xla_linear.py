@@ -1,0 +1,106 @@
+"""Chunked RWKV-6 / Mamba-2 recurrences in pure XLA — the 'xla'
+implementations used by the dry-run/roofline and CPU training.
+
+Same chunked math as the Pallas kernels (rwkv6.py / mamba2.py docstrings),
+vectorized over (batch, heads) with lax.scan over chunks.  The sequential
+ref.py oracles would make reverse-mode save one carried state per *token*
+(51 GB/device for rwkv6-3b train_4k); chunking bounds the saved carries to
+one state per chunk.  All exponentials are non-positive — stable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6(r, k, v, w, u, state=None, *, chunk: int = 32):
+    """Chunked WKV6.  r/k/w: (B,T,H,Dk); v: (B,T,H,Dv); u: (H,Dk);
+    w = log-decay <= 0.  Returns (out (B,T,H,Dv), final state (B,H,Dk,Dv))."""
+    b, t, h, dk = k.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def split(x):
+        return jnp.moveaxis(
+            x.reshape(b, n, chunk, h, x.shape[-1]), 1, 0)   # (n,b,chunk,h,d)
+
+    rc, kc, vc, wc = split(r.astype(jnp.float32)), split(k.astype(jnp.float32)), \
+        split(v.astype(jnp.float32)), split(w.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    ti = jnp.arange(chunk)[:, None]
+    si = jnp.arange(chunk)[None, :]
+    strict = (si < ti)[None, :, :, None, None]              # (1,L,L,1,1)
+
+    def body(s, xs):
+        rb, kb, vb, wb = xs                                 # (b,L,h,d*)
+        lw = jnp.cumsum(wb, axis=1)                         # inclusive
+        aq = lw - wb                                        # exclusive
+        o = jnp.einsum("blhk,bhkv->blhv", rb * jnp.exp(aq), s)
+        expo = aq[:, :, None] - lw[:, None, :]              # (b,L,L,h,dk)
+        pair = jnp.where(strict, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+        scores = jnp.einsum("btshk,bthk,bshk->bths",
+                            pair, rb, kb)
+        o = o + jnp.einsum("bths,bshv->bthv", scores, vb)
+        o = o + jnp.einsum("blhk,hk,blhk->blh", rb, uf, kb)[..., None] * vb
+        lw_last = lw[:, -1:]
+        kd = kb * jnp.exp(lw_last - lw)
+        s = jnp.exp(lw_last[:, 0])[..., None] * s + \
+            jnp.einsum("blhk,blhv->bhkv", kd, vb)
+        return s, o
+
+    final, outs = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, t, h, dv)
+    return out.astype(v.dtype), final
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba2(x, a, b, c, state=None, *, chunk: int = 128):
+    """Chunked SSD.  x: (B,T,H,P); a: (B,T,H) log-decay <= 0; b/c: (B,T,H,N).
+    Returns (y (B,T,H,P), final state (B,H,N,P))."""
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    if state is None:
+        state = jnp.zeros((bs, h, n, p), jnp.float32)
+
+    def split(z):
+        return jnp.moveaxis(
+            z.reshape(bs, nc, chunk, h, z.shape[-1]), 1, 0)
+
+    xc = split(x.astype(jnp.float32))
+    bc = split(b.astype(jnp.float32))
+    cc = split(c.astype(jnp.float32))
+    ac = jnp.moveaxis(a.astype(jnp.float32).reshape(bs, nc, chunk, h), 1, 0)
+
+    ti = jnp.arange(chunk)[:, None]
+    si = jnp.arange(chunk)[None, :]
+    incl = (si <= ti)[None, :, :, None]                     # (1,L,L,1)
+
+    def body(s, xs):
+        xb, ab, bb, cb = xs
+        la = jnp.cumsum(ab, axis=1)                         # (b,L,h)
+        y = jnp.einsum("blhn,bhnp->blhp", cb * jnp.exp(la)[..., None], s)
+        decay = jnp.where(
+            incl, jnp.exp(jnp.minimum(la[:, :, None] - la[:, None, :], 0.0)),
+            0.0)                                            # (b,t,s,h)
+        gram = jnp.einsum("bthn,bshn->btsh", cb, bb) * decay
+        y = y + jnp.einsum("btsh,bshp->bthp", gram, xb)
+        la_last = la[:, -1:]
+        bd = bb * jnp.exp(la_last - la)[..., None]
+        s = jnp.exp(la_last[:, 0])[..., None, None] * s + \
+            jnp.einsum("blhn,blhp->bhnp", bd, xb)
+        return s, y
+
+    final, ys = jax.lax.scan(body, state, (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bs, t, h, p)
+    return y.astype(x.dtype), final

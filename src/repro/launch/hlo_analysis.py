@@ -1,0 +1,221 @@
+"""Post-SPMD HLO text analysis for the roofline (DESIGN.md §7).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (empirically
+verified: flops are layer-count-invariant under scan), so totals for scanned
+models must be reconstructed.  This parser walks the partitioned HLO text:
+
+  * splits it into computations,
+  * counts dot FLOPs (2 · prod(output) · prod(contracting dims)) and
+    collective bytes per computation,
+  * rolls totals up through ``fusion``/``call``/``while`` edges, multiplying
+    while bodies by their ``known_trip_count`` backend config,
+
+yielding per-device HLO_FLOPs (dot-dominated; elementwise ops excluded, noted
+in EXPERIMENTS.md) and per-device collective bytes split by op kind.
+No jax import — pure text processing, unit-testable on saved HLO.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every shape literal in ``text`` (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s+(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)")
+
+
+def _dims_of(shape_text: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+def _dot_flops(line: str, symbols: dict[str, str]) -> int:
+    """2 · prod(output dims) · prod(lhs contracting dims).  Operand shapes
+    are resolved through the computation's symbol table (this HLO print mode
+    shows operand *names* only)."""
+    head, _, tail = line.partition(" dot(")
+    out_n = 1
+    for d in _dims_of(head.split("=", 1)[-1]):
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", tail)
+    lhs_name = tail.split(",")[0].strip().rstrip(")")
+    lhs_dims = _dims_of(symbols.get(lhs_name, ""))
+    contract = 1
+    if m and lhs_dims:
+        for idx in (int(x) for x in m.group(1).split(",") if x):
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2 * out_n * contract
+
+
+@dataclass
+class Computation:
+    name: str
+    dot_flops: int = 0
+    conv_flops: int = 0
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    # (callee, multiplier) edges: fusions/calls x1, whiles x trip_count
+    edges: list[tuple[str, int]] = field(default_factory=list)
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symbols: dict[str, str] = {}
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                symbols = {}
+            continue
+        if cur is None:
+            continue
+        d = _DEF_RE.match(line)
+        if d:
+            symbols[d.group(1)] = d.group(2)
+        op = _OP_RE.match(line)
+        if not op:
+            continue
+        body = op.group(1)
+        if " dot(" in body:
+            cur.dot_flops += _dot_flops(line, symbols)
+        elif " convolution(" in body:
+            # flops ~ 2 * prod(out) * (in_ch * window) — rare in our models;
+            # approximate with 2*prod(out shape) * contraction from operands
+            cur.conv_flops += 2 * _shape_bytes(body.split(" convolution(")[0])
+        elif " while(" in body:
+            callee = _CALLS_RE.search(body)
+            trip = _TRIP_RE.search(body)
+            if callee:
+                cur.edges.append((callee.group(1),
+                                  int(trip.group(1)) if trip else 1))
+        else:
+            for kind in COLLECTIVES:
+                if f" {kind}(" in body or f" {kind}-start(" in body:
+                    out_bytes = _shape_bytes(body.split(f" {kind}")[0])
+                    g = _GROUPS_RE.search(body)
+                    group = int(g.group(2)) if g else 0
+                    key = kind
+                    cur.collective_bytes[key] = cur.collective_bytes.get(
+                        key, 0.0) + out_bytes
+                    cur.collective_bytes[key + ":group"] = max(
+                        cur.collective_bytes.get(key + ":group", 0), group)
+                    break
+            else:
+                if " fusion(" in body or " call(" in body:
+                    callee = _CALLS_RE.search(body)
+                    if callee:
+                        cur.edges.append((callee.group(1), 1))
+    return comps
+
+
+@dataclass
+class HLOReport:
+    dot_flops: float
+    collective_bytes: dict[str, float]      # per kind, raw output bytes
+    group_sizes: dict[str, int]
+    n_collectives: dict[str, int]
+
+    def wire_bytes(self) -> float:
+        """ICI wire traffic per device: ring-model multipliers —
+        all-reduce 2·(g−1)/g · size; all-gather/reduce-scatter (g−1)/g of
+        full buffer (output/input resp., both = parsed size here for AG;
+        RS parsed size is the small output → ×(g−1)); others 1×."""
+        total = 0.0
+        for kind, size in self.collective_bytes.items():
+            if kind.endswith(":group"):
+                continue
+            g = max(2, self.group_sizes.get(kind, 2))
+            if kind == "all-reduce":
+                total += 2.0 * size * (g - 1) / g
+            elif kind == "all-gather":
+                total += size * (g - 1) / g
+            elif kind == "reduce-scatter":
+                total += size * (g - 1)
+            else:
+                total += size
+        return total
+
+
+def entry_name(comps: dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fall back: a computation never referenced by others
+    referenced = {c for comp in comps.values() for c, _ in comp.edges}
+    for name in comps:
+        if name not in referenced and "main" in name:
+            return name
+    return max(comps, key=lambda n: len(comps[n].edges))
+
+
+def analyze(hlo: str) -> HLOReport:
+    comps = parse_computations(hlo)
+    root = entry_name(comps, hlo)
+
+    memo: dict[str, tuple[float, dict[str, float], dict[str, int]]] = {}
+
+    def roll(name: str, stack=()) -> tuple[float, dict[str, float], dict[str, int]]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, {}, {})
+        c = comps[name]
+        flops = float(c.dot_flops)
+        coll: dict[str, float] = {}
+        counts: dict[str, int] = {}
+        for k, v in c.collective_bytes.items():
+            if k.endswith(":group"):
+                continue
+            coll[k] = coll.get(k, 0.0) + v
+            counts[k] = counts.get(k, 0) + 1
+        for callee, mult in c.edges:
+            f2, c2, n2 = roll(callee, stack + (name,))
+            flops += mult * f2
+            for k, v in c2.items():
+                coll[k] = coll.get(k, 0.0) + mult * v
+            for k, v in n2.items():
+                counts[k] = counts.get(k, 0) + mult * v
+        memo[name] = (flops, coll, counts)
+        return memo[name]
+
+    flops, coll, counts = roll(root)
+    groups = {}
+    for c in comps.values():
+        for k, v in c.collective_bytes.items():
+            if k.endswith(":group"):
+                groups[k[:-6]] = max(groups.get(k[:-6], 0), int(v))
+    return HLOReport(flops, coll, groups, counts)

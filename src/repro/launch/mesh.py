@@ -1,0 +1,27 @@
+"""Production meshes (DESIGN.md §6).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state.  The dry-run launches with
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` (set in dryrun.py
+*before any jax import*); everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host offers, as a ('data','model') mesh — used by smoke
+    tests and the CPU example drivers."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

@@ -1,0 +1,201 @@
+"""Roofline analysis (deliverable (g), DESIGN.md §7): reads dry-run artifacts
+and derives the three roofline terms per (arch × shape × mesh).
+
+  compute term    = HLO_dot_FLOPs/dev ÷ peak_FLOP/s          (197 TF bf16)
+  memory term     = HBM bytes/dev     ÷ HBM bw               (819 GB/s)
+  collective term = ICI wire bytes/dev ÷ 2·link_bw           (50 GB/s/link,
+                    bidirectional ring on the sharded axis)
+
+Sources: HLO_dot_FLOPs and wire bytes come from the while-trip-aware HLO
+parse (hlo_analysis.py) — XLA's cost_analysis counts scan bodies once and is
+reported only as a cross-check.  HBM bytes are analytic (params + optimizer
++ saved activations + KV/state cache traffic per step) because no compiled
+source survives scan-once counting; the formula per cell kind is printed with
+the table.  MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N_active·B
+(decode, + KV attention reads).
+
+Run:  python -m repro.launch.roofline [--emit artifacts/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+ICI_BW = 2 * LINK_BW         # bidirectional ring on the sharded axis
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """Global mathematically-useful FLOPs for one step (MODEL_FLOPS)."""
+    n_active = cfg.params_active()
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.head_dim
+    if shape.kind == "train":
+        tokens = b * s
+        attn = 12 * cfg.n_layers * b * s * s * cfg.n_heads * hd \
+            if cfg.n_heads else 0
+        if cfg.family == "zamba2":
+            attn = attn // max(1, cfg.attn_every)
+        return 6.0 * n_active * tokens + attn
+    if shape.kind == "prefill":
+        tokens = b * s
+        attn = 4 * cfg.n_layers * b * s * s * cfg.n_heads * hd \
+            if cfg.n_heads else 0
+        if cfg.family == "zamba2":
+            attn = attn // max(1, cfg.attn_every)
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence
+    attn_layers = cfg.n_layers if cfg.family not in ("rwkv6", "zamba2") else \
+        (cfg.n_layers // max(1, cfg.attn_every) if cfg.family == "zamba2" else 0)
+    kv_flops = 4.0 * b * s * attn_layers * cfg.n_kv_heads * hd \
+        if cfg.n_kv_heads else 0
+    return 2.0 * n_active * b + kv_flops
+
+
+def hbm_bytes_per_dev(cfg, shape, n_dev: int, record: dict) -> float:
+    """Analytic per-device HBM traffic for one step (formula in module doc)."""
+    p_bytes = cfg.params_dense() * 2 / n_dev          # bf16, sharded
+    arg = record["memory"]["argument_bytes"]          # params(+opt+cache)/dev
+    b, s = shape.global_batch, shape.seq_len
+    act = b * s * cfg.d_model * 2 / n_dev             # one residual stream
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write + opt m/v read+write (in arg)
+        return 3 * p_bytes + 2 * (arg - p_bytes) + 2 * cfg.n_layers * act
+    if shape.kind == "prefill":
+        return p_bytes + 2 * cfg.n_layers * act
+    # decode: stream all (active) weights once + read the KV/state cache
+    active = p_bytes * cfg.params_active() / max(1, cfg.params_dense())
+    return active + (arg - p_bytes)
+
+
+@dataclass
+class Row:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_dev: float
+    hlo_flops_dev: float
+    temp_gib: float
+    arg_gib: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_dev / self.hlo_flops_dev \
+            if self.hlo_flops_dev else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / max(all terms): 1.0 = compute-bound at peak."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.compute_s / bound if bound else 0.0
+
+
+def build_row(record: dict) -> Row:
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+
+    cfg = get_config(record["arch"])
+    shape = SHAPES[record["shape"]]
+    n_dev = record["n_devices"]
+    hlo_flops = record["hlo"]["dot_flops"]
+    wire = record["hlo"]["wire_bytes"]
+    mem_bytes = hbm_bytes_per_dev(cfg, shape, n_dev, record)
+    return Row(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        compute_s=hlo_flops / PEAK_FLOPS,
+        memory_s=mem_bytes / HBM_BW,
+        collective_s=wire / ICI_BW,
+        model_flops_dev=model_flops(cfg, shape) / n_dev,
+        hlo_flops_dev=hlo_flops,
+        temp_gib=record["memory"]["temp_bytes"] / 2**30,
+        arg_gib=record["memory"]["argument_bytes"] / 2**30,
+    )
+
+
+def suggestion(row: Row) -> str:
+    if row.dominant == "collective":
+        return ("reduce wire bytes: coarser EP/TP collectives, bf16 reduce, "
+                "or re-shard the hot einsum")
+    if row.dominant == "memory":
+        if row.shape.startswith("decode") or row.shape.startswith("long"):
+            return ("decode is weight/cache streaming-bound: quantize KV, "
+                    "raise per-step batch, or multi-token decode")
+        return "cut re-fetch: fuse, larger per-step compute, better remat"
+    if row.useful_ratio < 0.5:
+        return ("compute-bound but <50% useful: shrink remat recompute / "
+                "head padding waste")
+    return "compute-bound: push MXU utilization (block shapes, bf16 paths)"
+
+
+def load_rows(variant: str = "baseline") -> list[Row]:
+    rows = []
+    for path in sorted(ART_DIR.glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("variant", "baseline") != variant:
+            continue
+        rows.append(build_row(rec))
+    return rows
+
+
+def markdown(rows: list[Row], single_pod_only: bool = True) -> str:
+    from repro.configs import all_cells, cell_skip_reason
+
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flops | roofline frac | temp GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    seen = set()
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh)):
+        if single_pod_only and "pod" in r.mesh:
+            continue
+        seen.add((r.arch, r.shape))
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** | "
+            f"{r.useful_ratio:.2f} | {r.roofline_fraction:.2f} | "
+            f"{r.temp_gib:.1f} |")
+    out.append("")
+    out.append("Skipped cells (DESIGN.md §5):")
+    for a, s in all_cells():
+        reason = cell_skip_reason(a, s)
+        if reason:
+            out.append(f"- {a} × {s}: {reason}")
+        elif (a, s) not in seen:
+            out.append(f"- {a} × {s}: (no dry-run artifact found)")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit", default=str(ART_DIR.parent / "roofline.md"))
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all-meshes", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.variant)
+    md = markdown(rows, single_pod_only=not args.all_meshes)
+    Path(args.emit).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.emit).write_text(md)
+    print(md)
+    print()
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape)):
+        if "pod" not in r.mesh:
+            print(f"{r.arch} x {r.shape}: {r.dominant}-bound -> "
+                  f"{suggestion(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Step functions: train_step / prefill_step / decode (serve) step builders,
+shared by the trainers, the servers, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import family_module
+from repro.models.config import ModelConfig
+from repro.optim import AdamW
+
+Params = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE in f32; padded-vocab rows arrive already masked
+    to -1e30 by unembed, so logsumexp ignores them."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def model_inputs(batch: dict, cfg: ModelConfig) -> dict:
+    return {k: v for k, v in batch.items() if k != "labels"}
+
+
+def make_loss_fn(cfg: ModelConfig, *, tp: int, impl: str = "xla"):
+    mod = family_module(cfg)
+
+    def loss_fn(params, batch):
+        logits = mod.forward(params, cfg, model_inputs(batch, cfg),
+                             tp=tp, impl=impl)
+        labels = batch["labels"]
+        if cfg.vis_tokens:           # loss on the text tail only
+            logits = logits[:, cfg.vis_tokens:]
+        return cross_entropy(logits, labels)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW, *, tp: int,
+                    impl: str = "xla"):
+    loss_fn = make_loss_fn(cfg, tp=tp, impl=impl)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, tp: int, impl: str = "xla"):
+    mod = family_module(cfg)
+
+    def prefill_step(params, batch):
+        return mod.forward(params, cfg, batch, tp=tp, impl=impl)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, tp: int, impl: str = "xla"):
+    mod = family_module(cfg)
+
+    def decode_step(params, cache, tokens, pos):
+        return mod.decode_step(params, cfg, cache, tokens, pos,
+                               tp=tp, impl=impl)
+
+    return decode_step

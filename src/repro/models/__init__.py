@@ -1,0 +1,19 @@
+"""Model zoo: one module per family, uniform functional API
+(init / specs / forward / decode_step / init_cache / cache_specs)."""
+from __future__ import annotations
+
+from types import ModuleType
+
+from . import rwkv6, transformer, zamba2
+from .config import SHAPES, ModelConfig, ShapeCell, reduced
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeCell", "family_module", "reduced",
+           "rwkv6", "transformer", "zamba2"]
+
+
+def family_module(cfg: ModelConfig) -> ModuleType:
+    if cfg.family == "rwkv6":
+        return rwkv6
+    if cfg.family == "zamba2":
+        return zamba2
+    return transformer  # dense / moe / vlm-backbone / encoder

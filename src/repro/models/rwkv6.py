@@ -1,0 +1,222 @@
+"""RWKV-6 "Finch" LM (rwkv6-3b): attention-free, data-dependent decay.
+
+Block = time-mix (WKV recurrence via the chunked Pallas kernel) + channel-mix.
+Faithful elements: token-shift interpolation, data-dependent per-channel decay
+through a low-rank (LoRA) projection, per-head bonus ``u``, per-head group
+norm, receptance gating in channel-mix.  Simplification (DESIGN.md
+§Arch-applicability): the token-shift mixing coefficients are static
+(per-channel ``mu``) rather than data-dependent ddlerp — the recurrence
+itself keeps the paper-relevant data-dependent decay.
+
+Head count 40 (2560/64) pads to 48 under tp=16 with zero o-proj rows (exact).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import constrain_activations
+from repro.kernels import ops
+from . import layers as L
+from .config import ModelConfig
+
+Params = dict[str, Any]
+LORA_RANK = 64
+
+
+def _heads(cfg: ModelConfig, tp: int) -> int:
+    return cfg.padded(tp).rwkv_heads or cfg.d_model // cfg.rwkv_head_dim
+
+
+def _block_init(key, cfg: ModelConfig, tp: int, dtype) -> Params:
+    d, dh = cfg.d_model, cfg.rwkv_head_dim
+    h = _heads(cfg, tp)
+    hd = h * dh
+    ks = jax.random.split(key, 12)
+    sc = d ** -0.5
+    p = {
+        "ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype),
+        # time-mix
+        "mu": L._normal(ks[0], (5, d), 0.02, dtype) + 0.5,  # r,k,v,g,w
+        "wr": L._normal(ks[1], (d, hd), sc, dtype),
+        "wk": L._normal(ks[2], (d, hd), sc, dtype),
+        "wv": L._normal(ks[3], (d, hd), sc, dtype),
+        "wg": L._normal(ks[4], (d, hd), sc, dtype),
+        "wo": L._normal(ks[5], (hd, d), hd ** -0.5, dtype),
+        "w0": jnp.full((hd,), -1.0, dtype),
+        "w_lora_a": L._normal(ks[6], (d, LORA_RANK), sc, dtype),
+        "w_lora_b": L._normal(ks[7], (LORA_RANK, hd), LORA_RANK ** -0.5, dtype),
+        "u": L._normal(ks[8], (h, dh), 0.5, dtype),
+        "ln_x": jnp.ones((h, dh), dtype),
+        # channel-mix
+        "mu_c": L._normal(ks[9], (2, d), 0.02, dtype) + 0.5,  # k, r
+        "wck": L._normal(ks[10], (d, cfg.d_ff), sc, dtype),
+        "wcv": L._normal(ks[11], (cfg.d_ff, d), cfg.d_ff ** -0.5, dtype),
+        "wcr": L._normal(ks[0], (d, d), sc, dtype),
+    }
+    logical = cfg.d_model // cfg.rwkv_head_dim
+    if h > logical:  # exact padding: zero output rows for the extra heads
+        mask = (jnp.arange(h) < logical).repeat(dh)[:, None]
+        p["wo"] = (p["wo"] * mask).astype(dtype)
+    return p
+
+
+def _block_specs(cfg: ModelConfig) -> Params:
+    return {
+        "ln1": P(None), "ln2": P(None),
+        "mu": P(None, None),
+        "wr": P(L.FSDP, L.TP), "wk": P(L.FSDP, L.TP), "wv": P(L.FSDP, L.TP),
+        "wg": P(L.FSDP, L.TP), "wo": P(L.TP, L.FSDP),
+        "w0": P(L.TP), "w_lora_a": P(L.FSDP, None), "w_lora_b": P(None, L.TP),
+        "u": P(L.TP, None), "ln_x": P(L.TP, None),
+        "mu_c": P(None, None),
+        "wck": P(L.FSDP, L.TP), "wcv": P(L.TP, L.FSDP), "wcr": P(L.FSDP, L.TP),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Token shift: x_{t-1}, with ``prev`` as the carry for decode."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _time_mix(p: Params, cfg: ModelConfig, x, tp: int, impl: str,
+              wkv_state=None, shift_prev=None):
+    b, s, d = x.shape
+    dh = cfg.rwkv_head_dim
+    h = _heads(cfg, tp)
+    xp = _shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xp - x) * mu[i] for i in range(5))
+
+    r = (xr @ p["wr"]).reshape(b, s, h, dh)
+    k = (xk @ p["wk"]).reshape(b, s, h, dh)
+    v = (xv @ p["wv"]).reshape(b, s, h, dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (Finch): log-decay = -exp(w0 + lora(x_w)) <= 0
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    logw = -jnp.exp(jnp.clip((p["w0"] + lora).astype(jnp.float32), -8.0, 6.0))
+    logw = logw.reshape(b, s, h, dh)
+
+    if s == 1:
+        # decode fast path: one recurrence step, no kernel launch
+        st = wkv_state if wkv_state is not None else jnp.zeros(
+            (b, h, dh, dh), jnp.float32)
+        r1, k1, v1 = (z[:, 0].astype(jnp.float32) for z in (r, k, v))
+        w1 = logw[:, 0]
+        kv = k1[..., :, None] * v1[..., None, :]
+        u_f = p["u"].astype(jnp.float32)
+        o1 = jnp.einsum("bhk,bhkv->bhv", r1,
+                        st + u_f[None, :, :, None] * kv)
+        new_state = jnp.exp(w1)[..., None] * st + kv
+        out = o1[:, None].astype(x.dtype)
+    else:
+        out, new_state = ops.rwkv6(r, k, v, logw.astype(x.dtype), p["u"],
+                                   wkv_state, implementation=impl)
+    # per-head group norm, then gate and project
+    out = L.rms_norm(out, p["ln_x"])
+    out = out.reshape(b, s, h * dh) * g
+    return out @ p["wo"], new_state, x[:, -1]
+
+
+def _channel_mix(p: Params, x, shift_prev=None):
+    xp = _shift(x, shift_prev)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + (xp - x) * mu[0]
+    xr = x + (xp - x) * mu[1]
+    hidden = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    return jax.nn.sigmoid(xr @ p["wcr"]) * (hidden @ p["wcv"]), x[:, -1]
+
+
+def _block(p: Params, cfg: ModelConfig, x, tp, impl, state=None):
+    st = state or {}
+    att, wkv, sh_t = _time_mix(p, cfg, L.rms_norm(x, p["ln1"]), tp, impl,
+                               st.get("wkv"), st.get("shift_t"))
+    x = x + att
+    cm, sh_c = _channel_mix(p, L.rms_norm(x, p["ln2"]), st.get("shift_c"))
+    x = constrain_activations(x + cm)
+    new_state = {"wkv": wkv, "shift_t": sh_t, "shift_c": sh_c}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key, tp: int = 1) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [_block_init(keys[i], cfg, tp, dtype)
+              for i in range(cfg.n_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": L.embed_init(keys[-2], cfg, tp, dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "head": {"table": L._normal(keys[-1], (cfg.padded(tp).vocab,
+                                               cfg.d_model), 0.02, dtype)},
+    }
+
+
+def specs(cfg: ModelConfig) -> Params:
+    blk = jax.tree_util.tree_map(lambda s: P(None, *s), _block_specs(cfg),
+                                 is_leaf=lambda x: isinstance(x, P))
+    return {"embed": L.embed_specs(), "layers": blk, "final_norm": P(None),
+            "head": L.embed_specs()}
+
+
+def forward(params, cfg: ModelConfig, inputs, *, tp: int = 1,
+            impl: str = "xla") -> jax.Array:
+    x = L.embed(params["embed"], inputs["tokens"])
+
+    def body(x, lp):
+        x, _ = _block(lp, cfg, x, tp, impl)
+        return x, None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    return L.unembed(params["head"], x, cfg.vocab)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1,
+               dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    h, dh = _heads(cfg, tp), cfg.rwkv_head_dim
+    ll = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((ll, batch, h, dh, dh), jnp.float32),
+        "shift_t": jnp.zeros((ll, batch, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((ll, batch, cfg.d_model), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> Params:
+    return {"wkv": P(None, L.BATCH_AXES, L.TP, None, None),
+            "shift_t": P(None, L.BATCH_AXES, None),
+            "shift_c": P(None, L.BATCH_AXES, None)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
+                tp: int = 1, impl: str = "xla"):
+    """State-carried single-token step (O(1) in context length — the reason
+    long_500k runs for this family)."""
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, xs):
+        lp, st = xs
+        x, ns = _block(lp, cfg, x, tp, impl, state=st)
+        return x, ns
+
+    x, new_state = jax.lax.scan(
+        body, x, (params["layers"],
+                  {"wkv": cache["wkv"], "shift_t": cache["shift_t"],
+                   "shift_c": cache["shift_c"]}))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = L.unembed(params["head"], x, cfg.vocab)
+    return logits, new_state

@@ -1,0 +1,244 @@
+"""Unified transformer family: dense GQA LMs (deepseek-coder-33b,
+deepseek-67b, qwen3-8b, internvl2-76b backbone), gemma2 (alternating
+local/global + softcaps + sandwich norms), MoE LMs (granite, moonshot), and
+the hubert encoder — selected purely by ModelConfig flags.
+
+Layers are scanned (jax.lax.scan) with optional remat so that 95-layer
+configs stay compile-light; gemma2's local/global alternation scans pairs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import constrain_activations
+from . import layers as L
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# One transformer block
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, tp: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "ln_attn": jnp.zeros((cfg.d_model,), dtype) if cfg.sandwich_norm
+        else jnp.ones((cfg.d_model,), dtype),
+        "ln_mlp": jnp.zeros((cfg.d_model,), dtype) if cfg.sandwich_norm
+        else jnp.ones((cfg.d_model,), dtype),
+        "attn": L.attn_init(ks[0], cfg, tp, dtype),
+    }
+    if cfg.sandwich_norm:
+        p["ln_attn_post"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln_mlp_post"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.n_experts:
+        p["moe"] = L.moe_init(ks[1], cfg, tp, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[2], cfg, dtype)
+    return p
+
+
+def _block_specs(cfg: ModelConfig) -> Params:
+    p: Params = {"ln_attn": P(None), "ln_mlp": P(None),
+                 "attn": L.attn_specs(cfg)}
+    if cfg.sandwich_norm:
+        p["ln_attn_post"] = P(None)
+        p["ln_mlp_post"] = P(None)
+    if cfg.n_experts:
+        p["moe"] = L.moe_specs()
+    else:
+        p["mlp"] = L.mlp_specs()
+    return p
+
+
+def _block(p: Params, cfg: ModelConfig, x, *, positions, tp, impl, window,
+           cache=None, cache_pos=None):
+    plus_one = cfg.sandwich_norm  # gemma-style (1+w) norms
+    h = L.rms_norm(x, p["ln_attn"], plus_one=plus_one)
+    attn_out, new_cache = L.attention(
+        p["attn"], cfg, h, positions=positions, tp=tp, impl=impl,
+        window=window, cache=cache, cache_pos=cache_pos)
+    if cfg.sandwich_norm:
+        attn_out = L.rms_norm(attn_out, p["ln_attn_post"], plus_one=True)
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln_mlp"], plus_one=plus_one)
+    if cfg.n_experts:
+        mlp_out = L.moe(p["moe"], cfg, h, tp)
+    else:
+        mlp_out = L.mlp(p["mlp"], h, gelu=cfg.gelu_mlp)
+    if cfg.sandwich_norm:
+        mlp_out = L.rms_norm(mlp_out, p["ln_mlp_post"], plus_one=True)
+    return constrain_activations(x + mlp_out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+def _stack(trees: list[Params]) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // 2 if cfg.alt_local_global else cfg.n_layers
+
+
+def init(cfg: ModelConfig, key, tp: int = 1) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = [_block_init(keys[i], cfg, tp, dtype)
+              for i in range(cfg.n_layers)]
+    if cfg.alt_local_global:
+        layers = {"local": _stack(blocks[0::2]), "global": _stack(blocks[1::2])}
+    else:
+        layers = {"all": _stack(blocks)}
+    p: Params = {
+        "embed": L.embed_init(keys[-3], cfg, tp, dtype),
+        "layers": layers,
+        "final_norm": (jnp.zeros if cfg.sandwich_norm else jnp.ones)(
+            (cfg.d_model,), dtype),
+    }
+    if not cfg.name.startswith("gemma"):   # gemma ties head to the embedding
+        p["head"] = {"table": L._normal(keys[-2], (cfg.padded(tp).vocab,
+                                                   cfg.d_model), 0.02, dtype)}
+    return p
+
+
+def specs(cfg: ModelConfig) -> Params:
+    blk = _block_specs(cfg)
+
+    def stacked(tree):
+        return jax.tree_util.tree_map(
+            lambda s: P(None, *s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    if cfg.alt_local_global:
+        layers = {"local": stacked(blk), "global": stacked(blk)}
+    else:
+        layers = {"all": stacked(blk)}
+    p: Params = {"embed": L.embed_specs(), "layers": layers,
+                 "final_norm": P(None)}
+    if not cfg.name.startswith("gemma"):
+        p["head"] = L.embed_specs()
+    return p
+
+
+def _run_layers(params, cfg: ModelConfig, x, *, positions, tp, impl,
+                caches=None, cache_pos=None):
+    """Scan the block stack; returns (x, new_caches)."""
+    decode = caches is not None
+
+    def make_body(window):
+        def body(carry, xs):
+            x = carry
+            if decode:
+                lp, cache = xs
+                x, nc = _block(lp, cfg, x, positions=positions, tp=tp,
+                               impl=impl, window=window, cache=cache,
+                               cache_pos=cache_pos)
+                return x, nc
+            x, _ = _block(xs, cfg, x, positions=positions, tp=tp,
+                          impl=impl, window=window)
+            return x, None
+        if cfg.remat and not decode:
+            return jax.checkpoint(body)
+        return body
+
+    if cfg.alt_local_global:
+        loc, glo = params["layers"]["local"], params["layers"]["global"]
+        body_l = make_body(cfg.local_window)
+        body_g = make_body(0)
+
+        def pair(x, xs):
+            if decode:
+                (lpl, cl), (lpg, cg) = xs
+                x, ncl = body_l(x, (lpl, cl))
+                x, ncg = body_g(x, (lpg, cg))
+                return x, (ncl, ncg)
+            lpl, lpg = xs
+            x, _ = body_l(x, lpl)
+            x, _ = body_g(x, lpg)
+            return x, None
+        if decode:
+            xs = ((loc, caches["local"]), (glo, caches["global"]))
+        else:
+            xs = (loc, glo)
+        x, ys = jax.lax.scan(pair, x, xs)
+        new_caches = ({"local": ys[0], "global": ys[1]} if decode else None)
+    else:
+        window = cfg.local_window
+        body = make_body(window)
+        xs = (params["layers"]["all"], caches["all"]) if decode \
+            else params["layers"]["all"]
+        x, ys = jax.lax.scan(body, x, xs)
+        new_caches = {"all": ys} if decode else None
+    return x, new_caches
+
+
+def _embed_inputs(params, cfg: ModelConfig, inputs: Params) -> jax.Array:
+    scale = cfg.name.startswith("gemma")
+    if cfg.embed_inputs:                       # hubert: precomputed frames
+        return inputs["frames"]
+    x = L.embed(params["embed"], inputs["tokens"], scale=scale)
+    if cfg.vis_tokens:                         # internvl2: patch prefix
+        x = jnp.concatenate([inputs["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, inputs: Params, *,
+            tp: int = 1, impl: str = "xla") -> jax.Array:
+    """Full-sequence forward -> logits (train / prefill / encoder)."""
+    x = _embed_inputs(params, cfg, inputs)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, _ = _run_layers(params, cfg, x, positions=positions, tp=tp, impl=impl)
+    x = L.rms_norm(x, params["final_norm"], plus_one=cfg.sandwich_norm)
+    head = params.get("head", params["embed"])
+    return L.unembed(head, x, cfg.vocab, cap=cfg.final_softcap)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1,
+               dtype=jnp.bfloat16) -> Params:
+    def one(n, seq):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype),
+            L.init_kv_cache(cfg, batch, seq, tp, dtype))
+    if cfg.alt_local_global:
+        n = cfg.n_layers // 2
+        # sliding-window layers carry a ring buffer of `window` slots —
+        # 8x smaller cache for gemma2 decode_32k (EXPERIMENTS.md §Perf)
+        local_seq = min(max_seq, cfg.local_window or max_seq)
+        return {"local": one(n, local_seq), "global": one(n, max_seq)}
+    return {"all": one(cfg.n_layers, max_seq)}
+
+
+def cache_specs(cfg: ModelConfig) -> Params:
+    base = jax.tree_util.tree_map(
+        lambda s: P(None, *s), L.kv_cache_specs(cfg),
+        is_leaf=lambda x: isinstance(x, P))
+    if cfg.alt_local_global:
+        return {"local": base, "global": base}
+    return {"all": base}
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array, pos: jax.Array, *, tp: int = 1,
+                impl: str = "xla") -> tuple[jax.Array, Params]:
+    """One autoregressive step: tokens (B, 1), pos scalar int32."""
+    scale = cfg.name.startswith("gemma")
+    x = L.embed(params["embed"], tokens, scale=scale)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    x, new_cache = _run_layers(params, cfg, x, positions=positions, tp=tp,
+                               impl=impl, caches=cache, cache_pos=pos)
+    x = L.rms_norm(x, params["final_norm"], plus_one=cfg.sandwich_norm)
+    head = params.get("head", params["embed"])
+    logits = L.unembed(head, x, cfg.vocab, cap=cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,7 @@
+"""Optimizer substrate: AdamW with global-norm clipping, schedules, and
+error-feedback gradient compression."""
+
+from .adamw import AdamW, OptState, cosine_schedule
+from .compression import ef_compress
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "ef_compress"]

@@ -1,0 +1,95 @@
+"""AdamW in pure JAX with f32 master moments over (possibly bf16) params,
+global-norm clipping and warmup+cosine schedule.  State specs mirror param
+specs so ZeRO-style sharding falls out of GSPMD (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass
+class OptState:
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(1, warmup))
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+class AdamW:
+    def __init__(self, lr: float | Callable = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+        self.lr = lr if callable(lr) else (lambda _: jnp.float32(lr))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+
+    def init(self, params: Params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree_util.tree_map(zeros, params),
+                        jax.tree_util.tree_map(zeros, params))
+
+    def init_specs(self, param_specs: Params) -> OptState:
+        from jax.sharding import PartitionSpec as P
+        return OptState(P(), param_specs, param_specs)
+
+    def update(self, grads: Params, state: OptState,
+               params: Params) -> tuple[Params, OptState, jax.Array]:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9)) \
+            if self.clip_norm > 0 else jnp.float32(1.0)
+        step = state.step + 1
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            update = (m2 / c1) / (jnp.sqrt(v2 / c2) + self.eps)
+            update = update + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m2, v2
+
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state.m)
+        flat_v = jax.tree_util.tree_leaves(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+        return new_p, OptState(step, new_m, new_v), gnorm
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.step, s.m, s.v), None),
+    lambda _, c: OptState(*c),
+)

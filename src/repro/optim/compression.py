@@ -1,0 +1,49 @@
+"""Gradient compression with error feedback.
+
+Two modes (DESIGN.md §6 "distributed-optimization tricks"):
+
+* ``ef_compress`` — int8 block-quantization with an f32 error-feedback
+  accumulator.  Quantize-dequantize happens *before* the data-parallel
+  reduction; the residual is carried to the next step, so the scheme is
+  unbiased in the long run (classic EF-SGD).  On real pods this halves/
+  quarters DP all-reduce bytes when paired with a low-precision reduction;
+  here it also serves the convergence-vs-compression benchmark.
+
+* the bf16-reduction path is free: params/grads are bf16 end-to-end and the
+  pjit-inserted reduce-scatter already moves 2-byte words (visible in the
+  dry-run's collective bytes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress(grads, ef_state):
+    """Error-feedback int8 compression.
+
+    grads/ef_state: matching pytrees (ef_state f32, zeros at step 0).
+    Returns (compressed_grads, new_ef_state).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, tree = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(tree, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(tree, [o[1] for o in out]))
+
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

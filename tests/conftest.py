@@ -1,0 +1,10 @@
+import sys
+from pathlib import Path
+
+# tests run with PYTHONPATH=src; this mirrors that when invoked otherwise.
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: no --xla_force_host_platform_device_count here — smoke tests and
+# benches must see the real (single) device; only launch/dryrun.py widens it.

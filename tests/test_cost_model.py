@@ -1,0 +1,131 @@
+"""Analytical cost model: legality, reuse-from-loop-order, padding waste,
+dataflow consistency, and agreement with the kernels' useful FLOPs."""
+import math
+
+import pytest
+
+from repro.core import workloads as W
+from repro.core.cost_model import TARGETS, evaluate, n_pes
+from repro.core.hw_primitives import HWBuilder
+from repro.core.intrinsics import GEMM
+from repro.core.matching import match
+from repro.core.sw_primitives import Schedule
+from repro.core.sw_space import SoftwareSpace
+
+
+def hw(vmem_kib=256, banks=2, rows=16, cols=16, depth=16, df="OS"):
+    return (HWBuilder("GEMM").reshapeArray([rows, cols], depth=depth)
+            .addCache(vmem_kib).partitionBanks(banks).dataflow(df).build())
+
+
+@pytest.fixture
+def gemm512():
+    return W.gemm(512, 512, 512)
+
+
+def sched(gm, tiles, order=("i", "j", "k"), choice_idx=0):
+    choices = match(GEMM, gm)
+    return Schedule(choices[choice_idx], tuple(sorted(tiles.items())),
+                    tuple(order), 0)
+
+
+def test_legal_and_flops(gemm512):
+    rep = evaluate(gemm512, sched(gemm512, {"i": 64, "j": 64, "k": 64}), hw())
+    assert rep.legal
+    assert rep.useful_flops == 2 * 512 ** 3
+    assert rep.flops >= rep.useful_flops
+    assert rep.latency_s > 0 and math.isfinite(rep.power_w)
+
+
+def test_vmem_overflow_illegal(gemm512):
+    big = sched(gemm512, {"i": 512, "j": 512, "k": 512})
+    rep = evaluate(gemm512, big, hw(vmem_kib=64))
+    assert not rep.legal and rep.latency_s == math.inf
+
+
+def test_padding_waste(gemm512):
+    """Tiles not aligned to the intrinsic size execute padded FLOPs —
+    the paper's Fig. 7(b) redundant-computation effect."""
+    aligned = evaluate(gemm512, sched(gemm512, {"i": 64, "j": 64, "k": 64}),
+                       hw())
+    ragged = evaluate(gemm512, sched(gemm512, {"i": 24, "j": 24, "k": 24}),
+                      hw())
+    assert aligned.utilization == 1.0
+    assert ragged.utilization < 1.0
+    assert ragged.flops > aligned.flops
+
+
+def test_loop_order_changes_traffic(gemm512):
+    """p1-vs-p2 (paper Fig. 2): same tiles, different order, different
+    HBM traffic because stationarity changes."""
+    t = {"i": 64, "j": 64, "k": 64}
+    a = evaluate(gemm512, sched(gemm512, t, order=("i", "j", "k")), hw())
+    b = evaluate(gemm512, sched(gemm512, t, order=("k", "j", "i")), hw())
+    assert a.hbm_bytes != b.hbm_bytes
+
+
+def test_banks_overlap_helps(gemm512):
+    t = {"i": 64, "j": 64, "k": 64}
+    one = evaluate(gemm512, sched(gemm512, t), hw(banks=1))
+    two = evaluate(gemm512, sched(gemm512, t), hw(banks=2))
+    assert two.latency_s < one.latency_s
+
+
+def test_bigger_array_not_always_better():
+    """Paper §VII-C ground truth: over-provisioned PE arrays pad small
+    workloads and can lose."""
+    small_wl = W.gemm(32, 32, 32)
+    choices = match(GEMM, small_wl)
+    s = Schedule(choices[0], (("i", 32), ("j", 32), ("k", 32)),
+                 ("i", "j", "k"), 0)
+    small_hw = hw(rows=16, cols=16, depth=16)
+    big_hw = hw(rows=256, cols=256, depth=16, vmem_kib=2048)
+    r_small = evaluate(small_wl, s, small_hw)
+    r_big = evaluate(small_wl, s, big_hw)
+    assert r_small.legal and r_big.legal
+    assert r_big.utilization < r_small.utilization
+
+
+def test_pe_budget_per_intrinsic():
+    g = HWBuilder("GEMM").reshapeArray([8, 8], depth=64).build()
+    v = HWBuilder("GEMV").reshapeArray([8, 8], depth=64).build()
+    d = HWBuilder("DOT").reshapeArray([8, 8], depth=64).build()
+    assert n_pes(g) == 64
+    assert n_pes(v) == 8 * 64
+    assert n_pes(d) == 64
+
+
+def test_dataflow_consistency_penalty(gemm512):
+    t = {"i": 64, "j": 64, "k": 64}
+    # OS stationary = output (i,j): innermost k does not index it -> good
+    good = evaluate(gemm512, sched(gemm512, t, order=("i", "j", "k")),
+                    hw(df="OS"))
+    bad = evaluate(gemm512, sched(gemm512, t, order=("k", "i", "j")),
+                   hw(df="OS"))
+    assert good.compute_s <= bad.compute_s
+
+
+def test_tpu_target_mxu_alignment(gemm512):
+    t = {"i": 128, "j": 128, "k": 128}
+    tpu_ok = evaluate(gemm512, sched(gemm512, t),
+                      hw(rows=128, cols=128, depth=128, vmem_kib=2048),
+                      target="tpu")
+    tpu_bad = evaluate(gemm512, sched(gemm512, t),
+                       hw(rows=100, cols=100, depth=128, vmem_kib=2048),
+                       target="tpu")
+    assert tpu_ok.legal
+    # misaligned blocks lose MXU efficiency -> more time per USEFUL flop
+    assert (tpu_bad.compute_s / tpu_bad.useful_flops
+            > tpu_ok.compute_s / tpu_ok.useful_flops)
+
+
+def test_default_schedule_is_legal_everywhere():
+    for wl in (W.gemm(256, 256, 256), W.conv2d(32, 16, 28, 28)):
+        for intr in ("GEMM",):
+            from repro.core.intrinsics import ALL_INTRINSICS
+            choices = match(ALL_INTRINSICS[intr], wl)
+            if not choices:
+                continue
+            space = SoftwareSpace(wl, choices, hw())
+            rep = evaluate(wl, space.default_schedule(), hw())
+            assert rep.legal

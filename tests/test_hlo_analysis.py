@@ -1,0 +1,68 @@
+"""HLO text parser: dots, collectives, while-trip rollup — on a synthetic
+module with known ground truth."""
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_computations
+
+HLO = """\
+HloModule test
+
+%inner_body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %lhs = f32[8,32]{1,0} constant(0)
+  %rhs = f32[32,16]{1,0} constant(0)
+  %dot.1 = f32[8,16]{1,0} dot(%lhs, %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[16,16]<=[256]
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ar, %ar)
+}
+
+%inner_cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%c, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,32]) -> f32[8,16] {
+  %a = f32[8,32]{1,0} parameter(0)
+  %w = f32[32,16]{1,0} constant(0)
+  %dot.0 = f32[8,16]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %init = (s32[], f32[8,16]{1,0}) tuple-whatever()
+  %wh = (s32[], f32[8,16]{1,0}) while(%init), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"7"}}
+  %ag = f32[8,64]{1,0} all-gather(%dot.0), channel_id=2, replica_groups=[64,4]<=[256], dimensions={1}
+  ROOT %r = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+DOT_FLOPS = 2 * 8 * 16 * 32          # one dot, both inside and outside
+
+
+def test_parse_finds_computations():
+    comps = parse_computations(HLO)
+    assert {"inner_body", "inner_cond", "main"} <= set(comps)
+    assert comps["inner_body"].dot_flops == DOT_FLOPS
+    assert comps["main"].dot_flops == DOT_FLOPS
+
+
+def test_while_trip_multiplication():
+    rep = analyze(HLO)
+    # entry dot + 7 x body dot
+    assert rep.dot_flops == DOT_FLOPS * (1 + 7)
+
+
+def test_collective_bytes_and_groups():
+    rep = analyze(HLO)
+    ar = 8 * 16 * 4            # f32[8,16] bytes
+    ag = 8 * 64 * 4
+    assert rep.collective_bytes["all-reduce"] == pytest.approx(7 * ar)
+    assert rep.collective_bytes["all-gather"] == pytest.approx(ag)
+    assert rep.group_sizes["all-reduce"] == 16
+    assert rep.group_sizes["all-gather"] == 4
+    assert rep.n_collectives["all-reduce"] == 7
+
+
+def test_wire_bytes_ring_model():
+    rep = analyze(HLO)
+    ar = 7 * 8 * 16 * 4
+    ag = 8 * 64 * 4
+    want = 2 * ar * 15 / 16 + ag * 3 / 4
+    assert rep.wire_bytes() == pytest.approx(want)

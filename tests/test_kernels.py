@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps against the ref.py oracles (interpret mode)
+plus the pure-XLA implementations (chunked attention custom-VJP, chunked
+linear recurrences)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import xla_attention as XA
+from repro.kernels import xla_linear as XL
+
+RNG = np.random.default_rng(42)
+
+
+def arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def close(a, b, rtol, atol):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=rtol,
+                               atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# GEMM / GEMV / DOT / CONV2D — the four paper intrinsics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(32, 32, 32), (96, 72, 80), (17, 129, 65),
+                                   (256, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(m, n, k, dtype):
+    a, b = arr((m, k), dtype), arr((k, n), dtype)
+    got = ops.matmul(a, b, bm=32, bn=32, bk=32, implementation="interpret")
+    want = ref.gemm_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    close(got, want, tol, tol * 10)
+
+
+@pytest.mark.parametrize("m,k", [(64, 64), (96, 80), (33, 257)])
+def test_gemv_sweep(m, k):
+    a, x = arr((m, k)), arr((k,))
+    close(ops.matvec(a, x, bm=32, bk=32, implementation="interpret"),
+          ref.gemv_ref(a, x), 1e-5, 1e-4)
+
+
+@pytest.mark.parametrize("k", [64, 80, 1000])
+def test_dot_sweep(k):
+    a, b = arr((k,)), arr((k,))
+    close(ops.dot(a, b, bk=64, implementation="interpret"),
+          ref.dot_ref(a, b), 1e-5, 1e-3)
+
+
+@pytest.mark.parametrize("c,h,w,kk,r", [(8, 12, 14, 16, 3), (16, 18, 20, 24, 3),
+                                        (4, 9, 9, 8, 1)])
+def test_conv2d_sweep(c, h, w, kk, r):
+    a, wgt = arr((c, h, w)), arr((kk, c, r, r))
+    close(ops.conv2d(a, wgt, bk=8, implementation="interpret"),
+          ref.conv2d_ref(a, wgt), 1e-4, 2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (Pallas) and chunked attention (XLA)
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [dict(), dict(softcap=20.0), dict(window=8),
+              dict(causal=False), dict(softcap=30.0, window=16)]
+
+
+@pytest.mark.parametrize("kw", ATTN_CASES)
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+def test_attention_sweep(kw, impl):
+    q = arr((2, 40, 4, 32), scale=0.5)
+    k = arr((2, 56, 2, 32), scale=0.5)
+    v = arr((2, 56, 2, 32), scale=0.5)
+    got = ops.attention(q, k, v, bq=16, bkv=16, implementation=impl, **kw)
+    close(got, ref.attention_ref(q, k, v, **kw), 1e-3, 1e-3)
+
+
+def test_attention_decode_single_query():
+    q = arr((3, 1, 4, 16), scale=0.5)
+    k = arr((3, 33, 4, 16), scale=0.5)
+    v = arr((3, 33, 4, 16), scale=0.5)
+    for impl in ("interpret", "xla"):
+        close(ops.attention(q, k, v, bq=8, bkv=16, implementation=impl),
+              ref.attention_ref(q, k, v), 1e-3, 1e-3)
+
+
+def test_xla_attention_gradients_match_ref():
+    q, k, v = (arr((2, 24, 4, 16), scale=0.5) for _ in range(3))
+    k = k[:, :, :2]
+    v = v[:, :, :2]
+    do = arr((2, 24, 4, 16))
+
+    def loss_x(q, k, v):
+        return (XA.attention(q, k, v, softcap=15.0, chunk=8) * do).sum()
+
+    def loss_r(q, k, v):
+        return (ref.attention_ref(q, k, v, softcap=15.0) * do).sum()
+
+    gx = jax.grad(loss_x, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gx, gr):
+        close(a, b, 2e-3, 2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 / Mamba2 recurrences
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+@pytest.mark.parametrize("with_state", [False, True])
+def test_rwkv6_sweep(impl, with_state):
+    b, t, h, dk, dv = 2, 32, 3, 16, 24
+    r, k = arr((b, t, h, dk)), arr((b, t, h, dk))
+    v = arr((b, t, h, dv))
+    w = jnp.asarray(-np.exp(RNG.standard_normal((b, t, h, dk)) * 0.5),
+                    jnp.float32)
+    u = arr((h, dk))
+    st = arr((b, h, dk, dv)) if with_state else None
+    got_o, got_s = ops.rwkv6(r, k, v, w, u, st, chunk=8, implementation=impl)
+    want_o, want_s = ref.rwkv6_ref(r, k, v, w, u, st)
+    close(got_o, want_o, 1e-3, 1e-3)
+    close(got_s, want_s, 1e-3, 1e-3)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "xla"])
+@pytest.mark.parametrize("with_state", [False, True])
+def test_mamba2_sweep(impl, with_state):
+    b, t, h, p, n = 2, 32, 3, 16, 8
+    x = arr((b, t, h, p))
+    a = jnp.asarray(-np.abs(RNG.standard_normal((b, t, h)) * 0.3), jnp.float32)
+    bb, cc = arr((b, t, h, n)), arr((b, t, h, n))
+    st = arr((b, h, n, p)) if with_state else None
+    got_y, got_s = ops.mamba2(x, a, bb, cc, st, chunk=8, implementation=impl)
+    want_y, want_s = ref.mamba2_ref(x, a, bb, cc, st)
+    close(got_y, want_y, 1e-3, 1e-3)
+    close(got_s, want_s, 1e-3, 1e-3)
+
+
+def test_rwkv6_chunked_state_streaming():
+    """Processing T tokens in one call == two chained half-calls."""
+    b, t, h, dk, dv = 1, 32, 2, 8, 8
+    r, k, v = arr((b, t, h, dk)), arr((b, t, h, dk)), arr((b, t, h, dv))
+    w = jnp.asarray(-np.exp(RNG.standard_normal((b, t, h, dk)) * 0.3),
+                    jnp.float32)
+    u = arr((h, dk))
+    o_full, s_full = XL.rwkv6(r, k, v, w, u, chunk=8)
+    o1, s1 = XL.rwkv6(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u, chunk=8)
+    o2, s2 = XL.rwkv6(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, s1,
+                      chunk=8)
+    close(jnp.concatenate([o1, o2], axis=1), o_full, 1e-4, 1e-4)
+    close(s2, s_full, 1e-4, 1e-4)
+
+
+def test_tuned_matmul_uses_registry(tmp_path):
+    from repro.core.codesign import Solution
+    from repro.core.hw_primitives import HWBuilder
+    from repro.core import solution as sol
+
+    hw = HWBuilder("GEMM").reshapeArray([256, 384], depth=512).build()
+    s = Solution(hw, {}, 1.0, 1.0, 1.0, "GEMM")
+    path = tmp_path / "solutions.json"
+    sol.save("myapp", s, path)
+    bm, bn, bk = sol.kernel_blocks("myapp", path)
+    assert (bm, bn, bk) == (256, 384, 512)
+    assert sol.kernel_blocks("missing", path) == (256, 256, 512)

@@ -1,0 +1,79 @@
+"""End-to-end system behaviour: train with failure injection + auto-resume,
+batched serving, and a real multi-pod dry-run cell — each via subprocess so
+device-count env vars stay isolated."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+
+def run(args, timeout=540):
+    env = {**os.environ, "PYTHONPATH": SRC}
+    # never inherit a widened device count from in-process imports of
+    # launch.dryrun; the dryrun subprocess sets its own XLA_FLAGS
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m", *args], text=True,
+                          capture_output=True, timeout=timeout, env=env,
+                          cwd=ROOT)
+
+
+def test_train_failure_injection_and_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    first = run(["repro.launch.train", "--arch", "qwen3-8b", "--smoke",
+                 "--steps", "12", "--checkpoint-every", "4",
+                 "--checkpoint-dir", ck, "--inject-failure-at", "6"])
+    assert "injected failure at step 6" in (first.stdout + first.stderr)
+    second = run(["repro.launch.train", "--arch", "qwen3-8b", "--smoke",
+                  "--steps", "12", "--checkpoint-every", "4",
+                  "--checkpoint-dir", ck])
+    assert second.returncode == 0, second.stderr[-2000:]
+    assert "resumed from checkpoint step 4" in second.stdout
+    assert "step   11" in second.stdout
+
+
+def test_train_with_grad_compression(tmp_path):
+    out = run(["repro.launch.train", "--arch", "granite-moe-3b-a800m",
+               "--smoke", "--steps", "4", "--checkpoint-dir",
+               str(tmp_path / "ck2"), "--grad-compression"])
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+def test_serve_batched_requests():
+    out = run(["repro.launch.serve", "--arch", "gemma2-2b", "--smoke",
+               "--requests", "5", "--slots", "3", "--max-new", "4"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "5 requests" in out.stdout
+
+
+def test_serve_rejects_encoder():
+    out = run(["repro.launch.serve", "--arch", "hubert-xlarge", "--smoke"])
+    assert "encoder-only" in (out.stdout + out.stderr)
+
+
+@pytest.mark.parametrize("mesh_flag", [[], ["--multi-pod"]])
+def test_dryrun_cell_compiles(mesh_flag):
+    """The real deliverable: lower+compile on the production meshes."""
+    out = run(["repro.launch.dryrun", "--arch", "gemma2-2b",
+               "--shape", "decode_32k", *mesh_flag])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK   gemma2-2b x decode_32k" in out.stdout
+
+
+def test_dryrun_skip_reason():
+    out = run(["repro.launch.dryrun", "--arch", "qwen3-8b",
+               "--shape", "long_500k"])
+    assert "SKIP" in out.stdout
+
+
+def test_roofline_report_builds():
+    art = ROOT / "artifacts" / "dryrun"
+    if not any(art.glob("*.json")):
+        pytest.skip("no dry-run artifacts yet")
+    out = run(["repro.launch.roofline"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "dominant" in out.stdout

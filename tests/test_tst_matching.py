@@ -1,0 +1,150 @@
+"""Two-step matching: unit tests against the paper's worked examples and
+hypothesis property tests on matching invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import intrinsics as I
+from repro.core import workloads as W
+from repro.core.matching import legal_leaf_subsets, match, partition_space
+from repro.core.tst import lca_kind, leaves, parse
+
+
+def test_parse_gemm_structure():
+    gm = W.gemm(64, 64, 64)
+    ls = leaves(gm.body)
+    assert [l.index for l in ls] == ["i", "k", "k", "j"]
+    assert gm.reduced == {"k"}
+    assert gm.flops() == 2 * 64 ** 3
+
+
+def test_parse_conv_affine_dims():
+    conv = W.conv2d(8, 8, 8, 8)
+    ls = leaves(conv.body)
+    assert len(ls) == 9  # paper: nine leaf nodes
+    # y and s share an affine node; y and c share only the access node
+    y = next(l for l in ls if l.index == "y")
+    s = next(l for l in ls if l.index == "s" and l.tensor == "A")
+    c = next(l for l in ls if l.index == "c" and l.tensor == "A")
+    assert lca_kind(conv.body, y.path, s.path) == "affine"
+    assert lca_kind(conv.body, y.path, c.path) == "access"
+
+
+def test_gemm_on_conv_choices():
+    """Paper §IV-B: the matcher must reject the affine-conflicting subsets
+    ((x,r) and (y,s) pairs — the paper's own illegality example) and keep
+    the k/{x,y}/{c,r,s} family."""
+    conv = W.conv2d(64, 64, 56, 56)
+    subsets = legal_leaf_subsets(I.GEMM, conv)
+    assert len(subsets) == 4
+    choices = match(I.GEMM, conv)
+    assert len(choices) == 8  # straight + transposed orientation each
+    for ch in choices:
+        m = dict(ch.index_map)
+        assert m["k"] in {"c", "r", "s"}          # reduced -> reduced
+        assert {m["i"], m["j"]} <= {"x", "y", "k"}
+        assert ch.accumulation                     # r/s/c stay in software
+
+
+def test_gemv_on_gemm_matches_fig4():
+    gm = W.gemm(32, 32, 32)
+    choices = match(I.GEMV, gm)
+    maps = {tuple(sorted(c.index_map)) for c in choices}
+    # choice #1 (columns of N) and choice #3 (rows of M, transposed)
+    assert (("i", "i"), ("j", "k")) in maps
+    assert (("i", "j"), ("j", "k")) in maps
+    # choice #2 (rows of N as vectors) is illegal: j would need to map to
+    # both k and j -> rejected by index matching
+    assert all(dict(c.index_map)["j"] == "k" for c in choices)
+
+
+def test_dot_matches_everything_reduced():
+    for w in (W.gemm(16, 16, 16), W.ttm(8, 8, 8, 8), W.conv2d(4, 4, 6, 6)):
+        assert match(I.DOT, w), w.name
+
+
+def test_gemm_on_mttkrp_requires_stages():
+    """Paper §VII-B: GEMM cannot tile monolithic MTTKRP; stage 1 of the
+    two-stage rewrite can be GEMM-accelerated; GEMV benefits both."""
+    mt = W.mttkrp(32, 32, 32, 16)
+    assert match(I.GEMM, mt) == []
+    s1, s2 = W.mttkrp_stages(32, 32, 32, 16)
+    assert match(I.GEMM, s1)
+    assert match(I.GEMV, mt)
+    assert match(I.GEMV, s1) and match(I.GEMV, s2)
+
+
+def test_conv2d_intrinsic_identity_match():
+    conv = W.conv2d(64, 64, 56, 56)
+    choices = match(I.CONV2D, conv)
+    assert any(dict(c.index_map) ==
+               {"k": "k", "x": "x", "y": "y", "c": "c", "r": "r", "s": "s"}
+               for c in choices)
+
+
+def test_occurrence_count_rule():
+    """An intrinsic index occurring once cannot map to a compute index
+    occurring twice (the unmapped occurrence would vary inside the call)."""
+    conv = W.conv2d(8, 8, 8, 8)
+    for ch in match(I.GEMM, conv):
+        m = dict(ch.index_map)
+        assert m["i"] not in {"c", "r", "s"}
+        assert m["j"] not in {"c", "r", "s"}
+
+
+def test_partition_space_covers_table1():
+    intr = [I.GEMM, I.GEMV, I.DOT]
+    wl = [W.gemm(32, 32, 32), W.ttm(8, 8, 8, 8), W.conv2d(4, 4, 6, 6)]
+    space = partition_space(intr, wl)
+    assert all((w.name, "DOT") in space for w in wl)
+    assert (wl[0].name, "GEMM") in space
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: invariants over random einsum-like workloads
+# ---------------------------------------------------------------------------
+
+_IDX = "abcdefg"
+
+
+@st.composite
+def random_workload(draw):
+    n_idx = draw(st.integers(3, 5))
+    idx = list(_IDX[:n_idx])
+    n_out = draw(st.integers(1, n_idx - 1))
+    out = idx[:n_out]
+    t1 = draw(st.lists(st.sampled_from(idx), min_size=2, max_size=3,
+                       unique=True))
+    t2 = draw(st.lists(st.sampled_from(idx), min_size=2, max_size=3,
+                       unique=True))
+    used = set(t1) | set(t2)
+    out = [i for i in out if i in used] or [sorted(used)[0]]
+    notation = (f"O[{','.join(out)}] = A[{','.join(t1)}] * B[{','.join(t2)}]")
+    extents = {i: 8 for i in used}
+    return parse(notation, extents, name="rand")
+
+
+@given(random_workload())
+@settings(max_examples=40, deadline=None)
+def test_matching_invariants(wl):
+    for intr in (I.GEMV, I.GEMM, I.DOT):
+        for ch in match(intr, wl):
+            m = dict(ch.index_map)
+            # injective index map
+            assert len(set(m.values())) == len(m)
+            # software loops are exactly the unmapped indices
+            assert set(ch.software_loops) == set(wl.all_indices()) - set(
+                m.values())
+            # intrinsic-reduced -> compute-reduced
+            for q, c in m.items():
+                if q in intr.reduced:
+                    assert c in wl.reduced
+            # occurrence counts agree
+            q_occ = {l.index: 0 for l in leaves(intr.body)}
+            for l in leaves(intr.body):
+                q_occ[l.index] += 1
+            c_occ = {}
+            for l in leaves(wl.body):
+                c_occ[l.index] = c_occ.get(l.index, 0) + 1
+            for q, c in m.items():
+                assert q_occ[q] == c_occ[c]
