@@ -32,7 +32,11 @@ PAPER_AXES = {
 def run(n_trials: int = 20, seed: int = 0):
     wl = W.xception_ground_truth()[:4]
     part = partition_space([ALL_INTRINSICS["GEMM"]], wl)
-    f = hw_objectives(wl, part, "GEMM", sw_budget="small", seed=seed)
+    # one shared evaluation cache: hardware points probed by several methods
+    # (same seed -> overlapping initial designs) are scored once
+    from repro.core.cost_model import EvalCache
+    f = hw_objectives(wl, part, "GEMM", sw_budget="small", seed=seed,
+                      cache=EvalCache())
     base = HWSpace("GEMM")
     space = HWSpace("GEMM", axes={**base.axes, **PAPER_AXES})
     res_m = mobo(space, f, n_init=5, n_trials=n_trials, seed=seed)

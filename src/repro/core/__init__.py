@@ -3,7 +3,8 @@ cost model, MOBO / NSGA-II / random hardware DSE, heuristic + Q-learning
 software DSE, and the co-design driver (paper Fig. 3)."""
 
 from .codesign import Constraints, Solution, codesign, separate_design
-from .cost_model import CostReport, evaluate
+from .cost_model import (CostReport, EvalCache, evaluate, evaluate_batch,
+                         evaluate_batch_reports)
 from .hw_primitives import HWBuilder, HWConfig
 from .hw_space import HWSpace
 from .intrinsics import ALL_INTRINSICS
@@ -15,8 +16,9 @@ from .sw_primitives import Schedule
 from .tst import TensorExpr, parse
 
 __all__ = [
-    "ALL_INTRINSICS", "Constraints", "CostReport", "HWBuilder", "HWConfig",
-    "HWSpace", "Schedule", "Solution", "TensorExpr", "TensorizeChoice",
-    "codesign", "evaluate", "match", "mobo", "nsga2", "parse",
+    "ALL_INTRINSICS", "Constraints", "CostReport", "EvalCache", "HWBuilder",
+    "HWConfig", "HWSpace", "Schedule", "Solution", "TensorExpr",
+    "TensorizeChoice", "codesign", "evaluate", "evaluate_batch",
+    "evaluate_batch_reports", "match", "mobo", "nsga2", "parse",
     "partition_space", "random_search", "separate_design",
 ]

@@ -78,19 +78,26 @@ class CodesignReport:
     per_intrinsic: dict[str, DSEResult]
     partition_sizes: dict[tuple[str, str], int]
     evaluations: int
+    cache_stats: dict | None = None
 
 
 def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
                   *, target: str = "spatial", seed: int = 0,
-                  sw_budget: str = "small"):
+                  sw_budget: str = "small", cache=None):
     """The paper's correlated objective: evaluating a hardware point runs the
-    software DSE and reports the *achieved* latency plus power/area."""
+    software DSE and reports the *achieved* latency plus power/area.
+
+    ``cache`` (an :class:`~repro.core.cost_model.EvalCache`) is threaded into
+    the inner software DSE and the final per-schedule rescore, so hardware
+    points probed by several explorers — or re-refined at a bigger software
+    budget in Step 3 — never re-derive a (hw, schedule) evaluation.
+    """
     from .cost_model import TARGETS, accelerator_area, evaluate
 
     def f(hw: HWConfig) -> tuple[float, float, float]:
         results = sw_dse.optimize_set(workloads, partition, hw,
                                       target=target, seed=seed,
-                                      budget=sw_budget)
+                                      budget=sw_budget, cache=cache)
         if not results:
             return (math.inf, math.inf, math.inf)
         lat = sw_dse.total_latency(results)
@@ -100,7 +107,7 @@ def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
             r = results.get(w.name)
             if r is None:
                 return (math.inf, math.inf, math.inf)
-            rep = evaluate(w, r.schedule, hw, target)
+            rep = evaluate(w, r.schedule, hw, target, cache=cache)
             if not rep.legal:
                 return (math.inf, math.inf, math.inf)
             e_tot += rep.energy_j
@@ -113,11 +120,20 @@ def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
 def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
              constraints: Constraints = None, target: str = "spatial",
              n_trials: int = 20, n_init: int = 5, seed: int = 0,
-             sw_budget: str = "small",
-             space_axes: dict | None = None) -> CodesignReport:
-    """Full HASCO flow over one application (= workload set)."""
+             sw_budget: str = "small", space_axes: dict | None = None,
+             cache=None) -> CodesignReport:
+    """Full HASCO flow over one application (= workload set).
+
+    One :class:`~repro.core.cost_model.EvalCache` is shared across the whole
+    run — every intrinsic's hardware DSE, its inner software DSE, and the
+    Step-3 full-budget refinement — so identical (hw, schedule) points probed
+    in different steps are evaluated exactly once.
+    """
+    from .cost_model import EvalCache
+
     intrinsics = intrinsics or ["GEMM", "GEMV", "DOT", "CONV2D"]
     constraints = constraints or Constraints()
+    cache = cache if cache is not None else EvalCache()
 
     # Step 1: partition space
     intr_tsts = [ALL_INTRINSICS[i.upper()] for i in intrinsics]
@@ -137,7 +153,7 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
         if space_axes:
             space = HWSpace(intrinsic, axes={**space.axes, **space_axes})
         f = hw_objectives(workloads, partition, intrinsic, target=target,
-                          seed=seed, sw_budget=sw_budget)
+                          seed=seed, sw_budget=sw_budget, cache=cache)
         res = mobo(space, f, n_init=n_init, n_trials=n_trials, seed=seed)
         per_intrinsic[intrinsic] = res
         evals += res.evaluations
@@ -146,16 +162,17 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
         if pick is None:
             continue
         hw, y = pick
-        # Step 3: refine the chosen point with the full software budget
+        # Step 3: refine the chosen point with the full software budget —
+        # the shared cache makes every Step-2 probe of this point free here
         results = sw_dse.optimize_set(workloads, partition, hw, target=target,
-                                      seed=seed, budget="full")
+                                      seed=seed, budget="full", cache=cache)
         lat = sw_dse.total_latency(results)
         sol = Solution(hw, {k: r.schedule for k, r in results.items()},
                        min(lat, y[0]), y[1], y[2], intrinsic)
         if best is None or sol.latency_s < best.latency_s:
             best = sol
 
-    return CodesignReport(best, per_intrinsic, sizes, evals)
+    return CodesignReport(best, per_intrinsic, sizes, evals, cache.stats())
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +181,7 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
 
 def separate_design(workloads: list[TensorExpr], hw: HWConfig, *,
                     target: str = "spatial", seed: int = 0,
-                    tuned_software: bool = True) -> Solution:
+                    tuned_software: bool = True, cache=None) -> Solution:
     """The traditional decoupled flow (Table III baseline): the accelerator
     ``hw`` was fixed without feedback from software DSE; software is then
     tuned (AutoTVM-style if ``tuned_software``) for that fixed hardware."""
@@ -181,11 +198,12 @@ def separate_design(workloads: list[TensorExpr], hw: HWConfig, *,
             return Solution(hw, {}, math.inf, math.inf,
                             accelerator_area(hw, TARGETS[target]), hw.intrinsic)
         if tuned_software:
-            r = template_search(w, choices[0], hw, target=target, seed=seed)
+            r = template_search(w, choices[0], hw, target=target, seed=seed,
+                                cache=cache)
             schedules[w.name] = r
         else:
             schedules[w.name] = SoftwareSpace(w, choices, hw, target).default_schedule()
-        rep = evaluate(w, schedules[w.name], hw, target)
+        rep = evaluate(w, schedules[w.name], hw, target, cache=cache)
         lat += rep.latency_s
         e_tot += rep.energy_j if rep.legal else math.inf
     area = accelerator_area(hw, TARGETS[target])
@@ -195,11 +213,12 @@ def separate_design(workloads: list[TensorExpr], hw: HWConfig, *,
 
 def template_search(workload: TensorExpr, choice: TensorizeChoice,
                     hw: HWConfig, *, target: str = "spatial", seed: int = 0,
-                    budget: int = 64) -> Schedule:
+                    budget: int = 64, cache=None) -> Schedule:
     """AutoTVM-style fixed-template tuning (paper §VII-D): the tensorize
     choice and loop order are fixed by the template author; only the sizes of
-    tensorized sub-workloads (tile factors) are explored."""
-    from .cost_model import evaluate
+    tensorized sub-workloads (tile factors) are explored.  The whole tile
+    population is scored with one batched cost-model call."""
+    from .cost_model import evaluate_batch
 
     rng = np.random.default_rng(seed)
     ext = workload.extents
@@ -213,13 +232,10 @@ def template_search(workload: TensorExpr, choice: TensorizeChoice,
             ts.append((c, min(ext[c], 1 << int(rng.integers(0, hi + 1)))))
         return tuple(sorted(ts))
 
-    best, best_lat = None, math.inf
-    for _ in range(budget):
-        s = Schedule(choice, random_tiles(), order, 0)
-        l = evaluate(workload, s, hw, target).latency_s
-        if l < best_lat:
-            best, best_lat = s, l
-    return best
+    population = [Schedule(choice, random_tiles(), order, 0)
+                  for _ in range(budget)]
+    lats = evaluate_batch(workload, hw, population, target, cache=cache)[:, 0]
+    return population[int(np.argmin(lats))]
 
 
 def human_template_choice(workload: TensorExpr,

@@ -9,16 +9,28 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
 from .hw_primitives import HWConfig
 from .hw_space import HWSpace
 from .pareto import default_reference, hypervolume, pareto_mask
-from .surrogate import GP
+from .surrogate import fit_gps
 
 Objectives = Callable[[HWConfig], tuple[float, ...]]
+# batched form: a population of configs -> (n, n_obj) array in one call
+BatchObjectives = Callable[[Sequence[HWConfig]], np.ndarray]
+
+
+def as_batch(objectives: Objectives,
+             batch_objectives: BatchObjectives | None) -> BatchObjectives:
+    """Promote a scalar objectives callable to the batched protocol (the
+    explorers only speak batch; scalar callers pay a per-config loop)."""
+    if batch_objectives is not None:
+        return batch_objectives
+    return lambda configs: np.array([objectives(c) for c in configs],
+                                    dtype=float)
 
 
 @dataclass
@@ -77,13 +89,17 @@ def rescore_hv_history(result: DSEResult, ref: np.ndarray) -> list[float]:
 
 def mobo(space: HWSpace, objectives: Objectives, *, n_init: int = 5,
          n_trials: int = 20, seed: int = 0, n_candidates: int = 256,
-         n_draws: int = 24, ref: np.ndarray | None = None) -> DSEResult:
+         n_draws: int = 24, ref: np.ndarray | None = None,
+         batch_objectives: BatchObjectives | None = None) -> DSEResult:
     """Algorithm 1.  ``objectives`` returns minimized metrics, e.g.
-    (latency_s, power_w, area_um2)."""
+    (latency_s, power_w, area_um2).  ``batch_objectives``, when given, scores
+    whole populations per call (the initial design, and each picked trial)
+    through the batched cost-model path."""
     rng = np.random.default_rng(seed)
+    fbatch = as_batch(objectives, batch_objectives)
 
     configs: list[HWConfig] = space.sample(rng, n_init)
-    ys = np.array([objectives(c) for c in configs], dtype=float)
+    ys = np.asarray(fbatch(configs), dtype=float)
     tried = {c.encode() for c in configs}
 
     fin = _finite_rows(ys)
@@ -113,7 +129,7 @@ def mobo(space: HWSpace, objectives: Objectives, *, n_init: int = 5,
             worst = np.nanmax(np.where(np.isfinite(Ylog), Ylog, np.nan),
                               axis=0)
             Y = np.where(np.isfinite(Ylog), Ylog, worst + 1.0)
-            gps = [GP().fit(X, Y[:, j]) for j in range(Y.shape[1])]
+            gps = fit_gps(X, Y)  # one shared kernel sweep for all objectives
         else:
             gps = None
 
@@ -153,7 +169,7 @@ def mobo(space: HWSpace, objectives: Objectives, *, n_init: int = 5,
             score = gain + 1e-3 * prob * (abs(hv_now) + 1e-9)
             pick = cands[int(top[int(np.argmax(score))])]
 
-        y = np.array(objectives(pick), dtype=float)
+        y = np.asarray(fbatch([pick]), dtype=float)[0]
         configs.append(pick)
         tried.add(pick.encode())
         ys = np.vstack([ys, y[None, :]])

@@ -9,7 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from .hw_space import HWSpace
-from .mobo import DSEResult, Objectives, _finite_rows
+from .mobo import (BatchObjectives, DSEResult, Objectives, _finite_rows,
+                   as_batch)
 from .pareto import default_reference, hypervolume
 
 
@@ -58,12 +59,21 @@ def _crowding(ys: np.ndarray, front: list[int]) -> dict[int, float]:
 
 
 def nsga2(space: HWSpace, objectives: Objectives, *, pop_size: int = 5,
-          n_trials: int = 20, seed: int = 0) -> DSEResult:
+          n_trials: int = 20, seed: int = 0,
+          batch_objectives: BatchObjectives | None = None,
+          children_per_gen: int = 1) -> DSEResult:
     """Evaluate at most ``n_trials`` distinct design points (the paper caps
-    all methods by trial count — evaluations are the expensive resource)."""
+    all methods by trial count — evaluations are the expensive resource).
+
+    The initial population and each generation's offspring are scored
+    through one batched objectives call; ``children_per_gen > 1`` evaluates
+    a whole brood per generation (clipped to the trial budget) before
+    environmental selection.
+    """
     rng = np.random.default_rng(seed)
+    fbatch = as_batch(objectives, batch_objectives)
     configs = space.sample(rng, pop_size)
-    ys = np.array([objectives(c) for c in configs], dtype=float)
+    ys = np.asarray(fbatch(configs), dtype=float)
     tried = {c.encode(): i for i, c in enumerate(configs)}
 
     all_configs = list(configs)
@@ -97,28 +107,38 @@ def nsga2(space: HWSpace, objectives: Objectives, *, pop_size: int = 5,
                 return pop_idx[a] if rank.get(a, 0) < rank.get(b, 0) else pop_idx[b]
             return pop_idx[a] if crowd.get(a, 0) >= crowd.get(b, 0) else pop_idx[b]
 
-        # produce offspring until we add one unseen point
-        child = None
-        for _ in range(64):
+        # produce this generation's brood of unseen offspring, then score
+        # the whole brood with one batched objectives call
+        brood: list = []
+        brood_keys = set()
+        want = min(max(1, children_per_gen), n_trials - len(all_configs))
+        for _ in range(64 * want):
+            if len(brood) >= want:
+                break
             pa = all_configs[tournament()]
             pb = all_configs[tournament()]
             c = space.mutate(space.crossover(pa, pb, rng), rng)
-            if c.encode() not in tried:
-                child = c
+            key = c.encode()
+            if key not in tried and key not in brood_keys:
+                brood.append(c)
+                brood_keys.add(key)
+        if len(brood) < want:
+            extra = space.sample(rng, want - len(brood),
+                                 exclude=set(tried) | brood_keys)
+            brood += extra
+            if not brood:
                 break
-        if child is None:
-            extra = space.sample(rng, 1, exclude=set(tried))
-            if not extra:
-                break
-            child = extra[0]
-        y = np.array(objectives(child), dtype=float)
-        tried[child.encode()] = len(all_configs)
-        all_configs.append(child)
-        all_ys = np.vstack([all_ys, y[None, :]])
-        hv_history.append(hv_of(all_ys))
+        ys_brood = np.asarray(fbatch(brood), dtype=float)
+        new_idx = []
+        for child, y in zip(brood, ys_brood):
+            tried[child.encode()] = len(all_configs)
+            new_idx.append(len(all_configs))
+            all_configs.append(child)
+            all_ys = np.vstack([all_ys, y[None, :]])
+            hv_history.append(hv_of(all_ys))
 
         # environmental selection on the union
-        union = pop_idx + [len(all_configs) - 1]
+        union = pop_idx + new_idx
         uys = all_ys[union]
         fronts = _fast_nondominated_sort(uys)
         new_pop: list[int] = []

@@ -120,12 +120,26 @@ class DQN:
     def q_values(self, feat: np.ndarray) -> np.ndarray:
         return np.asarray(_forward(self.params, jnp.asarray(feat[None, :])))[0]
 
+    def q_values_batch(self, feats: np.ndarray) -> np.ndarray:
+        """Q-values for a whole state batch, one network forward: (B, A)."""
+        return np.asarray(_forward(self.params, jnp.asarray(feats)))
+
     def select(self, feat: np.ndarray) -> int:
         """Epsilon-greedy revision choice (the paper applies the highest-Q
         revision to the candidate)."""
         if self.rng.random() < self.eps:
             return int(self.rng.integers(self.n_actions))
         return int(np.argmax(self.q_values(feat)))
+
+    def select_batch(self, feats: np.ndarray) -> np.ndarray:
+        """Epsilon-greedy actions for the entire candidate frontier in one
+        call: a single forward pass scores every state, then per-state
+        exploration noise is applied (int array of shape (B,))."""
+        feats = np.asarray(feats, np.float32)
+        greedy = np.argmax(self.q_values_batch(feats), axis=1)
+        explore = self.rng.random(len(feats)) < self.eps
+        random_a = self.rng.integers(self.n_actions, size=len(feats))
+        return np.where(explore, random_a, greedy).astype(int)
 
     def record(self, s, a, r, s2, done=False):
         self.replay.add(np.asarray(s, np.float32), a, r,

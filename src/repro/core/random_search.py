@@ -4,15 +4,18 @@ from __future__ import annotations
 import numpy as np
 
 from .hw_space import HWSpace
-from .mobo import DSEResult, Objectives, _finite_rows
+from .mobo import (BatchObjectives, DSEResult, Objectives, _finite_rows,
+                   as_batch)
 from .pareto import default_reference, hypervolume
 
 
 def random_search(space: HWSpace, objectives: Objectives, *,
-                  n_trials: int = 20, seed: int = 0) -> DSEResult:
+                  n_trials: int = 20, seed: int = 0,
+                  batch_objectives: BatchObjectives | None = None) -> DSEResult:
     rng = np.random.default_rng(seed)
     configs = space.sample(rng, n_trials)
-    ys = np.array([objectives(c) for c in configs], dtype=float)
+    ys = np.asarray(as_batch(objectives, batch_objectives)(configs),
+                    dtype=float)
 
     fin = _finite_rows(ys)
     base = ys[fin] if fin.any() else np.ones((1, ys.shape[1]))

@@ -5,6 +5,13 @@
   promising revision choice per candidate  →  evaluate, learn, iterate.
 
 The DQN is shared across all design points of one software space (paper).
+
+Evaluation is batched (DESIGN.md §4.3): the initial pool, the whole revision
+frontier of each round, and each refill are scored through
+``SoftwareSpace.latency_batch`` — one vectorized cost-model pass per batch —
+and the DQN scores all chosen candidates with a single network forward.  An
+optional :class:`~repro.core.cost_model.EvalCache` makes re-probed
+(hw, schedule) points free across rounds, budget tiers, and co-design steps.
 """
 from __future__ import annotations
 
@@ -13,6 +20,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .cost_model import EvalCache
 from .heuristic import top_k
 from .hw_primitives import HWConfig
 from .matching import TensorizeChoice
@@ -33,14 +41,15 @@ class SWResult:
 def optimize(workload: TensorExpr, choices: list[TensorizeChoice],
              hw: HWConfig, *, target: str = "spatial", pool_size: int = 24,
              rounds: int = 12, k: int = 6, seed: int = 0,
-             dqn: DQN | None = None, use_qlearning: bool = True) -> SWResult:
+             dqn: DQN | None = None, use_qlearning: bool = True,
+             cache: EvalCache | None = None) -> SWResult:
     """Find a low-latency schedule for one workload on one accelerator."""
-    space = SoftwareSpace(workload, choices, hw, target)
+    space = SoftwareSpace(workload, choices, hw, target, cache=cache)
     rng = np.random.default_rng(seed)
 
     pool: list[Schedule] = [space.default_schedule()]
     pool += [space.random_schedule(rng) for _ in range(pool_size - 1)]
-    lat = [space.latency(s) for s in pool]
+    lat = [float(l) for l in space.latency_batch(pool)]
     evals = len(pool)
     history = [min(lat)]
 
@@ -49,24 +58,27 @@ def optimize(workload: TensorExpr, choices: list[TensorizeChoice],
 
     for _ in range(rounds):
         chosen = top_k(pool, lat, k)
-        best = min(lat)
-        for i in chosen:
-            s = pool[i]
-            feat = space.features(s)
-            if use_qlearning:
-                a = dqn.select(feat)
-            else:
-                a = int(rng.integers(len(space.moves)))
-            s2 = space.apply(s, space.moves[a], rng)
-            l2 = space.latency(s2)
-            evals += 1
+        # the round's whole revision frontier in three batched calls: one
+        # feature stack, one DQN forward for every candidate, one vectorized
+        # cost-model pass over every revised schedule
+        feats = np.stack([space.features(pool[i]) for i in chosen])
+        if use_qlearning:
+            acts = dqn.select_batch(feats)
+        else:
+            acts = rng.integers(len(space.moves), size=len(chosen))
+        revised = [space.apply(pool[i], space.moves[int(a)], rng)
+                   for i, a in zip(chosen, acts)]
+        new_lat = space.latency_batch(revised)
+        evals += len(revised)
+        for j, (i, s2) in enumerate(zip(chosen, revised)):
+            l2 = float(new_lat[j])
             if use_qlearning:
                 # reward: relative improvement over the revised candidate
                 if math.isfinite(l2) and math.isfinite(lat[i]) and lat[i] > 0:
                     r = float(np.clip((lat[i] - l2) / lat[i], -1.0, 1.0))
                 else:
                     r = -1.0 if not math.isfinite(l2) else 0.0
-                dqn.record(feat, a, r, space.features(s2))
+                dqn.record(feats[j], int(acts[j]), r, space.features(s2))
                 dqn.train_step()
             pool.append(s2)
             lat.append(l2)
@@ -74,11 +86,12 @@ def optimize(workload: TensorExpr, choices: list[TensorizeChoice],
         keep = top_k(pool, lat, max(pool_size // 2, k))
         pool = [pool[i] for i in keep]
         lat = [lat[i] for i in keep]
-        while len(pool) < pool_size:
-            s = space.random_schedule(rng)
-            pool.append(s)
-            lat.append(space.latency(s))
-            evals += 1
+        refill = [space.random_schedule(rng)
+                  for _ in range(pool_size - len(pool))]
+        if refill:
+            lat += [float(l) for l in space.latency_batch(refill)]
+            pool += refill
+            evals += len(refill)
         history.append(min(lat))
 
     best_i = int(np.argmin(lat))
@@ -88,8 +101,8 @@ def optimize(workload: TensorExpr, choices: list[TensorizeChoice],
 def optimize_set(workloads: list[TensorExpr],
                  partition: dict[tuple[str, str], list[TensorizeChoice]],
                  hw: HWConfig, *, target: str = "spatial", seed: int = 0,
-                 budget: str = "small",
-                 dqn: DQN | None = None) -> dict[str, SWResult]:
+                 budget: str = "small", dqn: DQN | None = None,
+                 cache: EvalCache | None = None) -> dict[str, SWResult]:
     """Per-workload schedules on a shared accelerator (paper §III: one
     accelerator per application, one program per workload)."""
     sizes = {"small": dict(pool_size=12, rounds=4, k=4),
@@ -101,10 +114,11 @@ def optimize_set(workloads: list[TensorExpr],
         if not choices:
             continue
         if shared_dqn is None:
-            space = SoftwareSpace(w, choices, hw, target)
+            space = SoftwareSpace(w, choices, hw, target, cache=cache)
             shared_dqn = DQN(space.n_features, len(space.moves), seed=seed)
         out[w.name] = optimize(w, choices, hw, target=target,
-                               seed=seed + 17 * n, dqn=shared_dqn, **sizes)
+                               seed=seed + 17 * n, dqn=shared_dqn,
+                               cache=cache, **sizes)
     return out
 
 

@@ -13,7 +13,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .cost_model import evaluate
+from .cost_model import EvalCache, evaluate, evaluate_batch, evaluate_batch_reports
 from .hw_primitives import HWConfig
 from .matching import TensorizeChoice
 from .sw_primitives import Schedule
@@ -39,7 +39,8 @@ class SoftwareSpace:
     """Legal schedules for one workload on one accelerator instance."""
 
     def __init__(self, workload: TensorExpr, choices: list[TensorizeChoice],
-                 hw: HWConfig, target: str = "spatial"):
+                 hw: HWConfig, target: str = "spatial",
+                 cache: EvalCache | None = None):
         if not choices:
             raise ValueError(f"no tensorize choices for {workload.name}")
         self.workload = workload
@@ -49,6 +50,7 @@ class SoftwareSpace:
                 f"no {hw.intrinsic} choices for {workload.name}")
         self.hw = hw
         self.target = target
+        self.cache = cache
         self.loops = list(workload.all_indices())
 
         # the action table (paper: "change the combination of the primitive
@@ -88,10 +90,22 @@ class SoftwareSpace:
 
     # -- evaluation ---------------------------------------------------------------
     def latency(self, s: Schedule) -> float:
-        return evaluate(self.workload, s, self.hw, self.target).latency_s
+        return evaluate(self.workload, s, self.hw, self.target,
+                        cache=self.cache).latency_s
 
     def report(self, s: Schedule):
-        return evaluate(self.workload, s, self.hw, self.target)
+        return evaluate(self.workload, s, self.hw, self.target,
+                        cache=self.cache)
+
+    def latency_batch(self, schedules: list[Schedule]) -> np.ndarray:
+        """Latencies of a whole candidate population in one vectorized pass
+        (the DSE hot path — DESIGN.md §4.3)."""
+        return evaluate_batch(self.workload, self.hw, schedules, self.target,
+                              cache=self.cache)[:, 0]
+
+    def report_batch(self, schedules: list[Schedule]):
+        return evaluate_batch_reports(self.workload, self.hw, schedules,
+                                      self.target, cache=self.cache)
 
     # -- moves ---------------------------------------------------------------------
     def apply(self, s: Schedule, move: Move,

@@ -1,0 +1,14 @@
+"""Version compatibility shims for Pallas TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
+0.5; the kernels import the name from here so they run on both sides of the
+rename without touching jax module state.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _conv_kernel(a_ref, w_ref, o_ref, acc_ref, *, xdim: int, ydim: int,
                  taps: tuple[tuple[int, int], ...]):
@@ -52,7 +54,7 @@ def conv2d(a: jax.Array, w: jax.Array, *, bk: int = 128,
         out_specs=pl.BlockSpec((bk, x, y), lambda kk: (kk, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((k, x, y), a.dtype),
         scratch_shapes=[pltpu.VMEM((bk, x * y), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(a, w)

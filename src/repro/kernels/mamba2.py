@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _mamba2_kernel(x_ref, a_ref, b_ref, c_ref, h0_ref,
                    y_ref, hT_ref, state_ref, *, chunk: int, n_t: int):
@@ -99,7 +101,7 @@ def mamba2(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
             jax.ShapeDtypeStruct((bs * h, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xf, af, bf, cf, h0)

@@ -195,6 +195,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict] per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     rep = hlo_analysis.analyze(hlo)
     n_dev = mesh.size

@@ -104,6 +104,11 @@ def main() -> None:
         batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
         t0 = time.time()
         if step == args.inject_failure_at:
+            # drain the async writer first: the injection simulates a crash
+            # *after* the last checkpoint landed, so the rerun demonstrably
+            # resumes from it (a writer killed mid-write is already safe —
+            # it only ever loses the in-flight step, never corrupts)
+            ckpt.wait()
             raise SystemExit(
                 f"[injected failure at step {step}] — rerun the same "
                 f"command; training auto-resumes from the last checkpoint")

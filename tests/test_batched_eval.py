@@ -1,0 +1,164 @@
+"""Batched cost-model evaluation: elementwise agreement with the scalar
+reference on random (hw, schedule) populations, cache semantics, and the
+explorer-facing batch APIs."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.cost_model import (EvalCache, _evaluate_reference, evaluate,
+                                   evaluate_batch, evaluate_batch_reports)
+from repro.core.hw_space import HWSpace
+from repro.core.intrinsics import ALL_INTRINSICS
+from repro.core.matching import match
+from repro.core.sw_primitives import Schedule
+from repro.core.sw_space import SoftwareSpace
+
+REPORT_FIELDS = ("latency_s", "energy_j", "power_w", "area_um2", "flops",
+                 "useful_flops", "hbm_bytes", "compute_s", "memory_s")
+
+
+def _population(wl, intrinsic, n, seed, n_hw=8):
+    rng = np.random.default_rng(seed)
+    choices = match(ALL_INTRINSICS[intrinsic], wl)
+    hws = HWSpace(intrinsic).sample(rng, n_hw)
+    space = SoftwareSpace(wl, choices, hws[0], "spatial")
+    schedules = [space.random_schedule(rng) for _ in range(n)]
+    hw_list = [hws[int(rng.integers(len(hws)))] for _ in range(n)]
+    return hw_list, schedules
+
+
+def _assert_report_matches(ref, got, ctx=""):
+    for f in REPORT_FIELDS:
+        a, b = getattr(ref, f), getattr(got, f)
+        if math.isfinite(a) or math.isfinite(b):
+            assert b == pytest.approx(a, rel=1e-9), f"{ctx}: {f} {a} != {b}"
+        else:
+            assert a == b or (math.isinf(a) and math.isinf(b)), \
+                f"{ctx}: {f} {a} != {b}"
+    assert ref.legal == got.legal, ctx
+    assert ref.calls == got.calls, ctx
+    assert ref.vmem_bytes == got.vmem_bytes, ctx
+    assert ref.why_illegal == got.why_illegal, ctx
+
+
+@pytest.mark.parametrize("case", [
+    ("gemm", "GEMM"), ("gemm", "GEMV"), ("gemm", "DOT"),
+    ("conv", "GEMM"), ("conv", "CONV2D"), ("ttm", "GEMM"),
+])
+@pytest.mark.parametrize("target", ["spatial", "tpu"])
+def test_batch_matches_scalar_on_random_populations(case, target):
+    """Property: evaluate_batch agrees elementwise with the scalar reference
+    over random schedule × random hardware populations (legal, padded,
+    vmem-overflow, and intrinsic-mismatch candidates all arise here)."""
+    kind, intrinsic = case
+    wl = {"gemm": W.gemm(512, 256, 128),
+          "conv": W.conv2d(64, 32, 28, 28),
+          "ttm": W.ttm(128, 64, 64, 64)}[kind]
+    if not match(ALL_INTRINSICS[intrinsic], wl):
+        pytest.skip(f"no {intrinsic} choices for {wl.name}")
+    hw_list, schedules = _population(wl, intrinsic, 96, seed=0)
+    reports = evaluate_batch_reports(wl, hw_list, schedules, target)
+    ys = evaluate_batch(wl, hw_list, schedules, target)
+    for i, (s, h) in enumerate(zip(schedules, hw_list)):
+        ref = _evaluate_reference(wl, s, h, target)
+        _assert_report_matches(ref, reports[i], f"{kind}/{intrinsic}[{i}]")
+        for j, f in enumerate(("latency_s", "power_w", "area_um2")):
+            a = getattr(ref, f)
+            if math.isfinite(a):
+                assert ys[i, j] == pytest.approx(a, rel=1e-9)
+            else:
+                assert not math.isfinite(ys[i, j])
+
+
+def test_batch_handles_mixed_tensorize_choices():
+    """One population mixing GEMM and GEMV tensorize choices of the same
+    workload on a GEMM accelerator: GEMV-choice rows are illegal (intrinsic
+    mismatch), GEMM rows score normally."""
+    wl = W.gemm(256, 128, 64)
+    choices = match(ALL_INTRINSICS["GEMM"], wl) \
+        + match(ALL_INTRINSICS["GEMV"], wl)
+    assert len({c.intrinsic_name for c in choices}) == 2
+    hw = HWSpace("GEMM").sample(np.random.default_rng(0), 1)[0]
+    rng = np.random.default_rng(1)
+    pop = []
+    for c in choices[:12]:
+        tiles = tuple(sorted((l, max(1, wl.extents[l] // 2))
+                             for l in c.mapped_compute_indices))
+        order = list(wl.all_indices())
+        rng.shuffle(order)
+        pop.append(Schedule(c, tiles, tuple(order), 0))
+    reports = evaluate_batch_reports(wl, hw, pop, "spatial")
+    for s, got in zip(pop, reports):
+        ref = _evaluate_reference(wl, s, hw, "spatial")
+        _assert_report_matches(ref, got, s.choice.intrinsic_name)
+        if s.choice.intrinsic_name != "GEMM":
+            assert not got.legal
+
+
+def test_single_hw_broadcast_and_wrapper_agree():
+    wl = W.gemm(128, 128, 128)
+    hw_list, schedules = _population(wl, "GEMM", 32, seed=2, n_hw=1)
+    hw = hw_list[0]
+    ys_b = evaluate_batch(wl, hw, schedules)          # broadcast single hw
+    ys_l = evaluate_batch(wl, [hw] * 32, schedules)   # explicit list
+    np.testing.assert_array_equal(ys_b, ys_l)
+    for i, s in enumerate(schedules):
+        rep = evaluate(wl, s, hw)
+        if math.isfinite(rep.latency_s):
+            assert ys_b[i, 0] == pytest.approx(rep.latency_s, rel=1e-9)
+
+
+def test_cache_hits_skip_recomputation():
+    """A repeated population is served entirely from the cache, and the memo
+    is shared between the batched and scalar entry points."""
+    wl = W.gemm(256, 256, 256)
+    hw_list, schedules = _population(wl, "GEMM", 64, seed=3, n_hw=4)
+    cache = EvalCache()
+    ys1 = evaluate_batch(wl, hw_list, schedules, cache=cache)
+    assert cache.hits == 0 and cache.misses == 64
+    ys2 = evaluate_batch(wl, hw_list, schedules, cache=cache)
+    assert cache.hits == 64, "second pass must be all hits"
+    assert cache.misses == 64, "second pass must not recompute"
+    np.testing.assert_array_equal(
+        np.nan_to_num(ys1, posinf=1e300), np.nan_to_num(ys2, posinf=1e300))
+    # scalar evaluate() sees the batch-populated memo
+    before = cache.hits
+    rep = evaluate(wl, schedules[0], hw_list[0], cache=cache)
+    assert cache.hits == before + 1
+    assert rep.objectives[0] == ys1[0, 0] or (
+        math.isinf(rep.objectives[0]) and math.isinf(ys1[0, 0]))
+
+
+def test_cache_distinguishes_targets_and_hw():
+    wl = W.gemm(128, 128, 128)
+    hw_list, schedules = _population(wl, "GEMM", 8, seed=4, n_hw=4)
+    cache = EvalCache()
+    evaluate_batch(wl, hw_list, schedules, "spatial", cache=cache)
+    evaluate_batch(wl, hw_list, schedules, "tpu", cache=cache)
+    assert cache.hits == 0 and cache.misses == 16
+
+
+def test_latency_batch_matches_scalar_latency():
+    """SoftwareSpace.latency_batch (what the software DSE drives) equals the
+    scalar latency() per schedule."""
+    wl = W.conv2d(32, 16, 14, 14)
+    choices = match(ALL_INTRINSICS["GEMM"], wl)
+    hw = HWSpace("GEMM").sample(np.random.default_rng(5), 1)[0]
+    space = SoftwareSpace(wl, choices, hw, "spatial", cache=EvalCache())
+    rng = np.random.default_rng(6)
+    pop = [space.random_schedule(rng) for _ in range(48)]
+    batched = space.latency_batch(pop)
+    for s, lb in zip(pop, batched):
+        ls = space.latency(s)
+        if math.isfinite(ls):
+            assert lb == pytest.approx(ls, rel=1e-9)
+        else:
+            assert not math.isfinite(lb)
+
+
+def test_empty_batch():
+    wl = W.gemm(64, 64, 64)
+    hw = HWSpace("GEMM").sample(np.random.default_rng(0), 1)[0]
+    assert evaluate_batch(wl, hw, []).shape == (0, 3)

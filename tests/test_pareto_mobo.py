@@ -1,7 +1,9 @@
 """Pareto/hypervolume/GP/MOBO machinery."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.hw_space import HWSpace

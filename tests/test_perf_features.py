@@ -3,11 +3,12 @@ quantization, ZeRO-1/pure-DP spec transforms, and grouped MoE dispatch
 invariants (hypothesis)."""
 import dataclasses
 
+import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from jax.sharding import PartitionSpec as P
 

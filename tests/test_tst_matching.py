@@ -1,7 +1,8 @@
 """Two-step matching: unit tests against the paper's worked examples and
 hypothesis property tests on matching invariants."""
-import hypothesis.strategies as st
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import intrinsics as I
