@@ -6,6 +6,8 @@
   table3_codesign    Table III  co-design vs decoupled, edge/cloud power
   kernel_micro       host-side kernel microbenchmarks
   bench_batched_eval batched vs scalar cost-model evaluation throughput
+  bench_calibration  analytical-vs-measured rank correlation, before/after
+                     per-op calibration (DESIGN.md §8)
 
 Each prints CSV; ``python -m benchmarks.run`` runs them all.
 """
@@ -20,12 +22,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 def main() -> None:
     from benchmarks import (ablation_qlearning, bench_batched_eval,
-                            fig7_intrinsics, fig10_hw_dse, fig11_sw_dse,
-                            kernel_micro, table3_codesign)
+                            bench_calibration, fig7_intrinsics, fig10_hw_dse,
+                            fig11_sw_dse, kernel_micro, table3_codesign)
 
     failures = []
-    for mod in (kernel_micro, bench_batched_eval, fig7_intrinsics,
-                fig11_sw_dse, fig10_hw_dse, table3_codesign,
+    for mod in (kernel_micro, bench_batched_eval, bench_calibration,
+                fig7_intrinsics, fig11_sw_dse, fig10_hw_dse, table3_codesign,
                 ablation_qlearning):
         name = mod.__name__.split(".")[-1]
         print(f"# === {name} ===", flush=True)

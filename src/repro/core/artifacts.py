@@ -1,0 +1,57 @@
+"""Robust JSON artifact I/O shared by the solution registry and the tuning
+database (DESIGN.md §8.3).
+
+The contract both persistence layers promise: a corrupt, missing, or
+foreign artifact loads as empty with a warning — a bad file must never take
+down a launch — and writes are atomic (tmp file + rename) so a concurrent
+reader never observes a torn artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import warnings
+from pathlib import Path
+
+
+def read_json_object(path: Path, label: str = "artifact") -> dict:
+    """The JSON object at ``path``, or {} (with a warning) on any defect."""
+    try:
+        text = path.read_text()
+    except FileNotFoundError:
+        return {}
+    except OSError as e:
+        warnings.warn(f"{label} {path}: unreadable ({e}); treating as empty",
+                      stacklevel=3)
+        return {}
+    try:
+        data = json.loads(text)
+    except json.JSONDecodeError as e:
+        warnings.warn(f"{label} {path}: corrupt JSON ({e}); treating as "
+                      f"empty", stacklevel=3)
+        return {}
+    if not isinstance(data, dict):
+        warnings.warn(f"{label} {path}: expected an object, got "
+                      f"{type(data).__name__}; treating as empty",
+                      stacklevel=3)
+        return {}
+    return data
+
+
+def atomic_write_json(path: Path, payload: dict) -> None:
+    """Write ``payload`` via tmp file + rename (same-directory, so the
+    rename is atomic on POSIX)."""
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name,
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

@@ -79,6 +79,11 @@ class CodesignReport:
     partition_sizes: dict[tuple[str, str], int]
     evaluations: int
     cache_stats: dict | None = None
+    # measured-autotuning extras (measure=True): per-intrinsic measurement
+    # summaries, the fitted per-op Calibration, and where the tuning DB went
+    measured: dict | None = None
+    calibration: object | None = None
+    db_path: object | None = None
 
 
 def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
@@ -121,19 +126,37 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
              constraints: Constraints = None, target: str = "spatial",
              n_trials: int = 20, n_init: int = 5, seed: int = 0,
              sw_budget: str = "small", space_axes: dict | None = None,
-             cache=None) -> CodesignReport:
+             cache=None, measure: bool = False,
+             measure_backend: str = "interpret", measure_top_k: int = 3,
+             measure_opts=None, db_path=None, app: str = "default"
+             ) -> CodesignReport:
     """Full HASCO flow over one application (= workload set).
 
     One :class:`~repro.core.cost_model.EvalCache` is shared across the whole
     run — every intrinsic's hardware DSE, its inner software DSE, and the
     Step-3 full-budget refinement — so identical (hw, schedule) points probed
     in different steps are evaluated exactly once.
+
+    With ``measure=True``, Step 3 closes the loop on measured truth
+    (DESIGN.md §8): the top-``measure_top_k`` constraint-feasible Pareto
+    candidates of each intrinsic are refined at full software budget, their
+    per-workload schedules are lowered to real Pallas kernels
+    (``tuner/measure.py``, backend ``measure_backend``) and timed, and the
+    committed Solution is the candidate with the lowest *measured* total
+    latency (workloads without a kernel lowering fall back to their
+    analytical latency).  All (analytical, measured) pairs feed a per-op
+    calibration fit; records + calibration are persisted to ``db_path``
+    (a tuning database, ``tuner/db.py``) when given.
     """
     from .cost_model import EvalCache
 
     intrinsics = intrinsics or ["GEMM", "GEMV", "DOT", "CONV2D"]
     constraints = constraints or Constraints()
     cache = cache if cache is not None else EvalCache()
+
+    if measure:
+        from repro.tuner.measure import MeasureOptions
+        measure_opts = measure_opts or MeasureOptions(backend=measure_backend)
 
     # Step 1: partition space
     intr_tsts = [ALL_INTRINSICS[i.upper()] for i in intrinsics]
@@ -143,6 +166,10 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
     per_intrinsic: dict[str, DSEResult] = {}
     evals = 0
     best: Solution | None = None
+    best_rank: tuple[int, float] | None = None
+    measured_summary: dict[str, dict] = {}
+    calib_samples: list = []
+    measure_points: list = []   # (workload, rep, MeasureResult) for the DB
 
     for intrinsic in intrinsics:
         intrinsic = intrinsic.upper()
@@ -158,21 +185,132 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
         per_intrinsic[intrinsic] = res
         evals += res.evaluations
 
-        pick = res.best_under(constraints.as_bounds())
-        if pick is None:
+        if not measure:
+            pick = res.best_under(constraints.as_bounds())
+            if pick is None:
+                continue
+            hw, y = pick
+            # Step 3: refine the chosen point with the full software budget —
+            # the shared cache makes every Step-2 probe of this point free
+            results = sw_dse.optimize_set(workloads, partition, hw,
+                                          target=target, seed=seed,
+                                          budget="full", cache=cache)
+            lat = sw_dse.total_latency(results)
+            sol = Solution(hw, {k: r.schedule for k, r in results.items()},
+                           min(lat, y[0]), y[1], y[2], intrinsic)
+            if best is None or sol.latency_s < best.latency_s:
+                best = sol
             continue
-        hw, y = pick
-        # Step 3: refine the chosen point with the full software budget —
-        # the shared cache makes every Step-2 probe of this point free here
+
+        # Step 3 (measured): re-rank the feasible frontier by real kernels
+        sol, rank, summary = _measure_rerank(
+            workloads, partition, res, constraints, intrinsic, target, seed,
+            cache, measure_opts, measure_top_k, calib_samples,
+            measure_points)
+        if summary:
+            measured_summary[intrinsic] = summary
+        if sol is not None and (best is None or rank < best_rank):
+            best, best_rank = sol, rank
+
+    calibration = None
+    saved_db = None
+    if measure:
+        from repro import tuner as _tuner
+        calibration = _tuner.calibrate.fit(calib_samples)
+        if db_path is not None:
+            saved_db = _persist_tuning(db_path, app, best, calibration,
+                                       measure_points)
+
+    return CodesignReport(best, per_intrinsic, sizes, evals, cache.stats(),
+                          measured_summary or None, calibration, saved_db)
+
+
+def _measure_rerank(workloads, partition, res: DSEResult,
+                    constraints: Constraints, intrinsic: str, target: str,
+                    seed: int, cache, measure_opts, top_k: int,
+                    calib_samples: list, measure_points: list
+                    ) -> tuple[Solution | None, tuple[int, float] | None,
+                               dict]:
+    """Measured Step 3 for one intrinsic: refine the top feasible candidates
+    at full software budget, time their kernels, commit to measured truth."""
+    from repro.tuner import calibrate as C
+    from repro.tuner import measure as M
+
+    from .cost_model import evaluate
+
+    bounds = constraints.as_bounds()
+    ok = np.ones(len(res.ys), dtype=bool)
+    for i, bound in bounds.items():
+        ok &= res.ys[:, i] <= bound
+    order = np.argsort(np.where(ok, res.ys[:, 0], math.inf))
+    cand_idx = [int(i) for i in order[:top_k] if ok[i]]
+    if not cand_idx:
+        return None, None, {}
+
+    best_sol: Solution | None = None
+    best_rank: tuple[int, float] | None = None
+    n_measured = n_fallback = 0
+    for i in cand_idx:
+        hw, y = res.configs[i], res.ys[i]
         results = sw_dse.optimize_set(workloads, partition, hw, target=target,
                                       seed=seed, budget="full", cache=cache)
-        lat = sw_dse.total_latency(results)
+        if set(r for r in results) != {w.name for w in workloads}:
+            continue
+        total = 0.0
+        cand_fallbacks = 0
+        for w in workloads:
+            sched = results[w.name].schedule
+            rep = evaluate(w, sched, hw, target, cache=cache)
+            mres = M.measure_one(w, hw, sched, measure_opts)
+            if mres.ok and rep.legal:
+                total += mres.latency_s
+                n_measured += 1
+                calib_samples.extend(C.collect_samples(w, [rep], [mres]))
+                measure_points.append((w, rep, mres))
+            else:  # no lowering / failed run: analytical latency stands in
+                total += rep.latency_s
+                cand_fallbacks += 1
+        n_fallback += cand_fallbacks
+        # rank lexicographically by (fallback count, total): analytical
+        # stand-ins live on a different scale than wall-clock measurements,
+        # so a candidate that could not be measured must never displace one
+        # that was — fallback totals only compare against each other
+        rank = (cand_fallbacks, total)
         sol = Solution(hw, {k: r.schedule for k, r in results.items()},
-                       min(lat, y[0]), y[1], y[2], intrinsic)
-        if best is None or sol.latency_s < best.latency_s:
-            best = sol
+                       total, y[1], y[2], intrinsic)
+        if best_rank is None or rank < best_rank:
+            best_sol, best_rank = sol, rank
+    summary = {"candidates": len(cand_idx), "measured": n_measured,
+               "fallbacks": n_fallback,
+               "best_measured_total_s":
+                   best_sol.latency_s if best_sol else math.inf}
+    return best_sol, best_rank, summary
 
-    return CodesignReport(best, per_intrinsic, sizes, evals, cache.stats())
+
+def _persist_tuning(db_path, app: str, best: Solution | None, calibration,
+                    measure_points: list):
+    """Write measured records + calibration (+ the winning app solution)
+    into the tuning database at ``db_path`` (merge-on-save, atomic)."""
+    from dataclasses import asdict
+
+    from repro.tuner.db import TuningDB, TuningRecord
+
+    db = TuningDB.load(db_path)
+    for w, rep, mres in measure_points:
+        pt = mres.point
+        if pt is None:
+            continue
+        db.record(TuningRecord(pt.op, pt.shape, pt.dtype, pt.backend,
+                               pt.block_map, mres.latency_s, rep.latency_s,
+                               app))
+    db.set_calibration(calibration)
+    if best is not None:
+        db.set_app(app, {
+            "hw": asdict(best.hw), "intrinsic": best.intrinsic,
+            "latency_s": best.latency_s, "power_w": best.power_w,
+            "area_um2": best.area_um2,
+        })
+    return db.save(db_path)
 
 
 # ---------------------------------------------------------------------------

@@ -5,23 +5,43 @@ training/serving framework consumes the accelerator config as the *tuned
 Pallas kernel configuration* (block shapes, pipeline depth) — this is how the
 paper's technique becomes a first-class feature of the framework
 (DESIGN.md §2: the co-designed "hardware" is the kernel resource envelope).
+
+This per-app registry is subsumed by the measured tuning database
+(``repro.tuner.db``): the DB stores shape-exact measured kernel records plus
+an ``apps`` section equivalent to this file's schema, and the dispatch layer
+(``kernels/ops.py``) consults the DB first.  The registry remains the
+lightweight analytical-only artifact and shares the same robustness
+contract: corrupt or missing files load as empty with a warning (a bad
+artifact must never take down a launch), and saves are atomic
+(tmp file + rename) and merge-on-save.
 """
 from __future__ import annotations
 
-import json
+import warnings
 from dataclasses import asdict
 from pathlib import Path
 
+from .artifacts import atomic_write_json, read_json_object
 from .codesign import Solution
 from .hw_primitives import HWConfig
 
 DEFAULT_PATH = Path("artifacts/solutions.json")
 
 
+def _read_registry(path: Path) -> dict:
+    """Missing/corrupt registries are empty, never fatal."""
+    return read_json_object(path, "solution registry")
+
+
 def save(app: str, sol: Solution, path: Path | str = DEFAULT_PATH) -> None:
+    """Merge ``sol`` into the registry under ``app``, atomically.
+
+    Existing apps are preserved (merge-on-save); the write goes through a
+    temp file + rename so readers never observe a torn artifact.
+    """
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    data = json.loads(path.read_text()) if path.exists() else {}
+    data = _read_registry(path)
     data[app] = {
         "hw": asdict(sol.hw),
         "intrinsic": sol.intrinsic,
@@ -34,17 +54,28 @@ def save(app: str, sol: Solution, path: Path | str = DEFAULT_PATH) -> None:
                 "index_map": list(map(list, s.choice.index_map))}
             for w, s in sol.schedules.items()},
     }
-    path.write_text(json.dumps(data, indent=2, sort_keys=True))
+    atomic_write_json(path, data)
 
 
 def load_hw(app: str, path: Path | str = DEFAULT_PATH) -> HWConfig | None:
-    path = Path(path)
-    if not path.exists():
+    """The app's co-designed accelerator, or None (missing app, missing
+    file, corrupt file, malformed entry — all non-fatal)."""
+    data = _read_registry(Path(path))
+    entry = data.get(app)
+    if not isinstance(entry, dict) or "hw" not in entry:
         return None
-    data = json.loads(path.read_text())
-    if app not in data:
+    try:
+        return HWConfig(**entry["hw"])
+    except (TypeError, ValueError) as e:
+        warnings.warn(f"solution registry {path}: malformed hw entry for "
+                      f"{app!r} ({e})", stacklevel=2)
         return None
-    return HWConfig(**data[app]["hw"])
+
+
+def mxu_legal(x: int, lane: int) -> int:
+    """Clamp a block dim down to an MXU-legal multiple of ``lane`` (floor,
+    never below one lane) — the one place this rule lives."""
+    return max(lane, (int(x) // lane) * lane)
 
 
 def kernel_blocks(app: str, path: Path | str = DEFAULT_PATH,
@@ -55,9 +86,5 @@ def kernel_blocks(app: str, path: Path | str = DEFAULT_PATH,
     hw = load_hw(app, path)
     if hw is None:
         return default
-
-    def legal(x: int, lane: int) -> int:
-        return max(lane, (x // lane) * lane)
-
-    return (legal(hw.pe_rows, 8), legal(hw.pe_cols, 128),
-            legal(hw.pe_depth, 128))
+    return (mxu_legal(hw.pe_rows, 8), mxu_legal(hw.pe_cols, 128),
+            mxu_legal(hw.pe_depth, 128))

@@ -21,6 +21,13 @@ def gemv(i: int, j: int, name: str = "") -> TensorExpr:
                  name=name or f"GEMV_{i}x{j}")
 
 
+def dot(i: int, name: str = "") -> TensorExpr:
+    """Scalar dot product; the 1-extent output index keeps the TensorExpr
+    machinery uniform (mirrors the DOT intrinsic's TST)."""
+    return parse("C[o] = A[i] * B[i]", {"i": i, "o": 1},
+                 name=name or f"DOT_{i}")
+
+
 def conv2d(k: int, c: int, x: int, y: int, r: int = 3, s: int = 3,
            name: str = "") -> TensorExpr:
     return parse("C[k,x,y] = A[c,x+r,y+s] * B[k,c,r,s]",

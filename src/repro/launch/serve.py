@@ -41,11 +41,24 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tuning-db", default=None,
+                    help="tuning database (tuner/db.py); defaults to "
+                         "artifacts/tuning_db.json")
+    ap.add_argument("--tuned-app", default=None,
+                    help="co-design app whose tuned kernel blocks to "
+                         "install (default: the arch name)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    # measured-autotuning pickup (DESIGN.md §8.4): install the app's tuned
+    # block shapes as dispatch defaults; shape-exact DB records still win
+    from repro.kernels import ops
+    tuned = ops.configure(app=args.tuned_app or args.arch,
+                          db_path=args.tuning_db)
+    if tuned:
+        print(f"tuned kernel blocks installed: gemm={tuned['gemm']}")
     if cfg.embed_inputs:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode loop "
                          f"(DESIGN.md §5) — use launch.train instead")

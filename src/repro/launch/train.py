@@ -53,11 +53,24 @@ def main() -> None:
     ap.add_argument("--inject-failure-at", type=int, default=-1,
                     help="simulate a crash at this step (tests restart)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tuning-db", default=None,
+                    help="tuning database (tuner/db.py); defaults to "
+                         "artifacts/tuning_db.json")
+    ap.add_argument("--tuned-app", default=None,
+                    help="co-design app whose tuned kernel blocks to "
+                         "install (default: the arch name)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
+    # measured-autotuning pickup (DESIGN.md §8.4): install the app's tuned
+    # block shapes as dispatch defaults; shape-exact DB records still win
+    from repro.kernels import ops as _ops
+    tuned = _ops.configure(app=args.tuned_app or args.arch,
+                           db_path=args.tuning_db)
+    if tuned:
+        print(f"tuned kernel blocks installed: gemm={tuned['gemm']}")
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh())
     tp = mesh.shape.get("model", 1)

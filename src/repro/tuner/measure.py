@@ -1,0 +1,294 @@
+"""Measurement backend: run candidate (HWConfig, Schedule) points as real
+Pallas kernels and time them (DESIGN.md §8.1).
+
+The analytical cost model (``core/cost_model.py``) explores at nanosecond
+cost but predicts TPU-instance behaviour; this module closes the loop by
+*lowering* a candidate to the concrete kernel the dispatch layer would run
+(``kernels/ops.py``) and timing that invocation with warmup/repeat/median
+discipline — the AutoTVM-style "measure" half of the tuner.
+
+Lowering rules (DESIGN.md §2: the co-designed accelerator IS a Pallas kernel
+resource envelope):
+
+  * the workload's tensor structure picks the kernel family (gemm / gemv /
+    dot / conv2d) — NOT the tensorize choice, because measurement runs what
+    the runtime would actually dispatch;
+  * block shapes are the schedule's interface tiles padded to the hardware
+    intrinsic block (the cost model's ``ptile``), so measurement is
+    sensitive to both the schedule's split factors and the accelerator's
+    array shape;
+  * on this CPU container kernels run with ``implementation='interpret'``;
+    on a real TPU pass ``backend='pallas'``.
+
+Failures (unloweable workload, shape/compile errors, kernel crashes) are
+*captured*: a failed candidate yields ``MeasureResult(latency_s=inf,
+error=...)`` instead of aborting the whole population — invalid points are
+data for the explorer, not exceptions.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.hw_primitives import HWConfig
+from repro.core.sw_primitives import Schedule
+from repro.core.tst import TensorExpr
+
+KERNEL_OPS = ("gemm", "gemv", "dot", "conv2d")
+
+
+@dataclass(frozen=True)
+class KernelPoint:
+    """The concrete kernel invocation a candidate lowers to — also the
+    tuning-database key (op, shape, dtype, backend) plus its block shape."""
+
+    op: str                       # one of KERNEL_OPS
+    shape: tuple[int, ...]        # canonical problem shape (see _classify)
+    dtype: str
+    backend: str                  # 'interpret' | 'pallas' | 'xla'
+    blocks: tuple[tuple[str, int], ...]   # sorted (name, value) pairs
+
+    @property
+    def block_map(self) -> dict[str, int]:
+        return dict(self.blocks)
+
+
+@dataclass(frozen=True)
+class MeasureResult:
+    """Timed outcome of one candidate.  ``latency_s`` is the median over
+    ``times_s``; a failed lowering/run carries +inf and the error string."""
+
+    latency_s: float
+    times_s: tuple[float, ...] = ()
+    point: KernelPoint | None = None
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return math.isfinite(self.latency_s)
+
+
+@dataclass
+class MeasureOptions:
+    backend: str = "interpret"
+    dtype: str = "float32"
+    warmup: int = 2
+    repeats: int = 5
+    # cap on the padded-tile volume a single kernel invocation may claim —
+    # guards the host against a schedule that pads a tile to an enormous
+    # block (interpret mode would happily allocate it)
+    max_block_elems: int = 1 << 24
+
+
+# ---------------------------------------------------------------------------
+# Workload classification: which kernel family implements this TensorExpr?
+# ---------------------------------------------------------------------------
+
+
+def classify(workload: TensorExpr) -> tuple[str, dict[str, str]] | None:
+    """-> (op, role->loop) for kernel-loweable workloads, else None.
+
+    Roles are kernel-block axes: gemm (m, n, k); gemv (m, k); dot (k,);
+    conv2d (k, c, x, y, r, s).  Classification is structural (tensor index
+    patterns), so it works for any loop naming.
+    """
+    tensors = workload.tensors()
+    if len(tensors) != 2:
+        return None
+    dims = list(tensors.values())
+    out = workload.out_indices
+    red = [l for l in workload.all_indices() if l in workload.reduced]
+
+    flat = [tuple(i for d in ds for i in d) for ds in dims]
+    ranks = sorted(len(f) for f in flat)
+
+    # DOT: two 1-D operands over one shared reduced index
+    if ranks == [1, 1] and len(red) == 1 and all(f == (red[0],) for f in flat):
+        return "dot", {"k": red[0]}
+
+    # GEMV: A[m, k] and x[k] -> y[m]
+    if ranks == [1, 2] and len(red) == 1 and len(out) == 1:
+        mat = flat[0] if len(flat[0]) == 2 else flat[1]
+        if set(mat) == {out[0], red[0]}:
+            return "gemv", {"m": out[0], "k": red[0]}
+
+    # GEMM: A[m, k] and B[k, n] -> C[m, n]
+    if ranks == [2, 2] and len(red) == 1 and len(out) == 2:
+        m, n, k = out[0], out[1], red[0]
+        sets = [set(f) for f in flat]
+        if {m, k} in sets and {k, n} in sets:
+            return "gemm", {"m": m, "n": n, "k": k}
+
+    # CONV2D: A[c, x+r, y+s] and W[k, c, r, s] -> C[k, x, y] ('valid')
+    if len(out) == 3 and len(red) == 3:
+        a = next((ds for ds in dims
+                  if len(ds) == 3 and any(len(d) == 2 for d in ds)), None)
+        w = next((ds for ds in dims if len(ds) == 4), None)
+        if a is not None and w is not None and len(a[0]) == 1:
+            (c,), (x, r), (y, s) = a[0], a[1], a[2]
+            if (workload.out_indices == (out[0], x, y)
+                    and {c, r, s} == set(red)):
+                return "conv2d", {"k": out[0], "c": c, "x": x, "y": y,
+                                  "r": r, "s": s}
+    return None
+
+
+def padded_tiles(workload: TensorExpr, hw: HWConfig,
+                 schedule: Schedule) -> dict[str, int]:
+    """Per-loop padded interface tile (the cost model's ``ptile``): the
+    schedule's split factor clamped to the extent and rounded up to the
+    intrinsic block dim its tensorize choice maps it onto."""
+    ext = workload.extents
+    block = hw.intrinsic_dims()
+    mapped = dict(schedule.choice.index_map)
+    tiles = schedule.tile_map
+    pt: dict[str, int] = {}
+    for loop in workload.all_indices():
+        t = max(1, min(tiles.get(loop, ext[loop]), ext[loop]))
+        b = 1
+        for q, c in mapped.items():
+            if c == loop:
+                b = max(1, block[q])
+                break
+        pt[loop] = -(-t // b) * b
+    return pt
+
+
+# ---------------------------------------------------------------------------
+# Lowering: (workload, hw, schedule) -> a timeable kernel invocation
+# ---------------------------------------------------------------------------
+
+
+def lower(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
+          opts: MeasureOptions) -> tuple[KernelPoint, Callable]:
+    """-> (point, thunk) where ``thunk()`` runs the kernel once and blocks.
+
+    Raises ValueError for workloads with no kernel lowering; the batch
+    driver converts that into a failed MeasureResult.
+    """
+    cls = classify(workload)
+    if cls is None:
+        raise ValueError(f"no kernel lowering for workload {workload.name!r}")
+    op, roles = cls
+    ext = workload.extents
+    pt = padded_tiles(workload, hw, schedule)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    dtype = jnp.dtype(opts.dtype)
+    rng = np.random.default_rng(0)
+
+    def arr(*shape):
+        return jnp.asarray(rng.standard_normal(shape), dtype)
+
+    if op == "gemm":
+        m, n, k = (ext[roles[r]] for r in ("m", "n", "k"))
+        blocks = {"bm": min(pt[roles["m"]], m), "bn": min(pt[roles["n"]], n),
+                  "bk": min(pt[roles["k"]], k)}
+        shape: tuple[int, ...] = (m, n, k)
+        a, b = arr(m, k), arr(k, n)
+        fn = lambda: ops.matmul(a, b, implementation=opts.backend, **blocks)
+    elif op == "gemv":
+        m, k = ext[roles["m"]], ext[roles["k"]]
+        blocks = {"bm": min(pt[roles["m"]], m), "bk": min(pt[roles["k"]], k)}
+        shape = (m, k)
+        a, x = arr(m, k), arr(k)
+        fn = lambda: ops.matvec(a, x, implementation=opts.backend, **blocks)
+    elif op == "dot":
+        k = ext[roles["k"]]
+        blocks = {"bk": min(pt[roles["k"]], k)}
+        shape = (k,)
+        a, b = arr(k), arr(k)
+        fn = lambda: ops.dot(a, b, implementation=opts.backend, **blocks)
+    else:  # conv2d
+        kk, c, x, y, r, s = (ext[roles[t]] for t in "kcxyrs")
+        blocks = {"bk": min(pt[roles["k"]], kk)}
+        shape = (kk, c, x, y, r, s)
+        a, w = arr(c, x + r - 1, y + s - 1), arr(kk, c, r, s)
+        fn = lambda: ops.conv2d(a, w, implementation=opts.backend, **blocks)
+
+    vol = 1
+    for v in pt.values():
+        vol *= v
+    if vol > opts.max_block_elems:
+        raise ValueError(f"padded tile volume {vol} exceeds "
+                         f"max_block_elems={opts.max_block_elems}")
+
+    point = KernelPoint(op, shape, str(dtype), opts.backend,
+                        tuple(sorted(blocks.items())))
+    return point, lambda: jax.block_until_ready(fn())
+
+
+def _time(thunk: Callable, opts: MeasureOptions) -> tuple[float, ...]:
+    for _ in range(opts.warmup):
+        thunk()
+    times = []
+    for _ in range(opts.repeats):
+        t0 = time.perf_counter()
+        thunk()
+        times.append(time.perf_counter() - t0)
+    return tuple(times)
+
+
+def measure_one(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
+                opts: MeasureOptions | None = None) -> MeasureResult:
+    """Lower and time one candidate; never raises on candidate failure."""
+    opts = opts or MeasureOptions()
+    try:
+        point, thunk = lower(workload, hw, schedule, opts)
+        times = _time(thunk, opts)
+    except Exception as e:  # failure capture: invalid candidates become inf
+        return MeasureResult(math.inf, (), None, f"{type(e).__name__}: {e}")
+    return MeasureResult(float(np.median(times)), times, point)
+
+
+def measure_batch(workload: TensorExpr,
+                  hw_configs: HWConfig | Sequence[HWConfig],
+                  schedules: Sequence[Schedule],
+                  opts: MeasureOptions | None = None) -> list[MeasureResult]:
+    """Measure a candidate population, deduplicating identical lowerings.
+
+    Many (hw, schedule) points lower to the same KernelPoint (e.g. tiles
+    that pad to the same block shape); each distinct point is compiled and
+    timed once and its result shared — the batched analogue of the cost
+    model's EvalCache, but for wall-clock measurements.
+    """
+    opts = opts or MeasureOptions()
+    schedules = list(schedules)
+    n = len(schedules)
+    if isinstance(hw_configs, HWConfig):
+        hws: list[HWConfig] = [hw_configs] * n
+    else:
+        hws = list(hw_configs)
+        if len(hws) == 1 and n > 1:
+            hws = hws * n
+        if len(hws) != n:
+            raise ValueError(f"{len(hws)} hw configs for {n} schedules")
+
+    memo: dict[KernelPoint, MeasureResult] = {}
+    out: list[MeasureResult] = []
+    for hw, sched in zip(hws, schedules):
+        try:
+            point, thunk = lower(workload, hw, sched, opts)
+        except Exception as e:
+            out.append(MeasureResult(math.inf, (), None,
+                                     f"{type(e).__name__}: {e}"))
+            continue
+        res = memo.get(point)
+        if res is None:
+            try:
+                times = _time(thunk, opts)
+                res = MeasureResult(float(np.median(times)), times, point)
+            except Exception as e:
+                res = MeasureResult(math.inf, (), point,
+                                    f"{type(e).__name__}: {e}")
+            memo[point] = res
+        out.append(res)
+    return out

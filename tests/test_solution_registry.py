@@ -1,0 +1,197 @@
+"""Solution-registry / tuning-DB persistence: exact round-trip recovery,
+merge-on-save across apps and runs, and corrupt-artifact hardening."""
+import json
+import math
+
+import pytest
+
+from repro.core import solution as S
+from repro.core import workloads as W
+from repro.core.codesign import Solution
+from repro.core.hw_primitives import HWBuilder
+from repro.core.intrinsics import GEMM
+from repro.core.matching import match
+from repro.core.sw_primitives import Schedule
+from repro.tuner.calibrate import Calibration, Correction
+from repro.tuner.db import TuningDB, TuningRecord
+
+
+def _solution(latency=1e-3, rows=32, cols=64, depth=128):
+    wl = W.gemm(64, 64, 64, name="g")
+    choice = match(GEMM, wl)[0]
+    sched = Schedule(choice,
+                     tuple(sorted((c, 32)
+                                  for c in choice.mapped_compute_indices)),
+                     tuple(wl.all_indices()), 0)
+    hw = (HWBuilder("GEMM").reshapeArray([rows, cols], depth=depth)
+          .addCache(2048).partitionBanks(2).build())
+    return Solution(hw, {"g": sched}, latency, 2.0, 1e8, "GEMM")
+
+
+# ---------------------------------------------------------------------------
+# registry round trip + merge
+# ---------------------------------------------------------------------------
+
+def test_registry_round_trip_exact_recovery(tmp_path):
+    path = tmp_path / "solutions.json"
+    sol = _solution(rows=24, cols=136, depth=144)
+    S.save("app1", sol, path)
+    hw = S.load_hw("app1", path)
+    assert hw == sol.hw                      # exact config recovery
+    # kernel_blocks clamps to MXU-legal multiples of (8, 128, 128)
+    assert S.kernel_blocks("app1", path) == (24, 128, 128)
+    assert S.kernel_blocks("nope", path) == (256, 256, 512)
+
+
+def test_registry_merge_on_save_two_apps(tmp_path):
+    path = tmp_path / "solutions.json"
+    S.save("app1", _solution(rows=16), path)
+    S.save("app2", _solution(rows=64), path)
+    assert S.load_hw("app1", path).pe_rows == 16
+    assert S.load_hw("app2", path).pe_rows == 64
+    data = json.loads(path.read_text())
+    assert set(data) == {"app1", "app2"}
+    assert "schedules" in data["app1"] and "g" in data["app1"]["schedules"]
+
+
+def test_registry_corrupt_and_missing_are_nonfatal(tmp_path):
+    missing = tmp_path / "absent.json"
+    assert S.load_hw("x", missing) is None
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{not json!!")
+    with pytest.warns(UserWarning, match="corrupt JSON"):
+        assert S.load_hw("x", corrupt) is None
+    assert S.kernel_blocks("x", corrupt) == (256, 256, 512)
+    # a list where an object is expected is also survivable
+    corrupt.write_text("[1, 2, 3]")
+    with pytest.warns(UserWarning, match="expected an object"):
+        assert S.load_hw("x", corrupt) is None
+
+
+def test_registry_save_recovers_corrupt_file_atomically(tmp_path):
+    path = tmp_path / "solutions.json"
+    path.write_text("garbage{{{")
+    with pytest.warns(UserWarning, match="corrupt JSON"):
+        S.save("app1", _solution(), path)
+    assert S.load_hw("app1", path) is not None
+    assert json.loads(path.read_text())      # valid JSON again
+    assert not list(tmp_path.glob("*.tmp"))  # no stray temp files
+
+
+def test_registry_malformed_hw_entry_warns_and_returns_none(tmp_path):
+    path = tmp_path / "solutions.json"
+    path.write_text(json.dumps({"app": {"hw": {"bogus_field": 1}}}))
+    with pytest.warns(UserWarning, match="malformed hw entry"):
+        assert S.load_hw("app", path) is None
+
+
+# ---------------------------------------------------------------------------
+# tuning-DB round trip + merge-on-save
+# ---------------------------------------------------------------------------
+
+def _rec(op="gemm", shape=(64, 64, 64), measured=1e-4, app="a",
+         blocks=None):
+    return TuningRecord(op, shape, "float32", "interpret",
+                        blocks or {"bm": 32, "bn": 32, "bk": 32},
+                        measured, 2e-4, app)
+
+
+def test_db_round_trip_best_config(tmp_path):
+    path = tmp_path / "db.json"
+    db = TuningDB(path)
+    db.record(_rec(blocks={"bm": 16, "bn": 64, "bk": 32}))
+    db.set_calibration(Calibration(
+        {"gemm": Correction("offset", offset=1.5, n_samples=8)}))
+    db.set_app("a", {"hw": {"pe_rows": 16}, "intrinsic": "GEMM"})
+    db.save()
+
+    back = TuningDB.load(path)
+    assert back.best_config("gemm", (64, 64, 64)) == \
+        {"bm": 16, "bn": 64, "bk": 32}           # exact config recovery
+    assert back.best_config("gemm", (64, 64, 65)) is None
+    assert back.best_config("gemv", (64, 64, 64)) is None
+    corr = back.calibration.for_op("gemm")
+    assert corr.kind == "offset" and corr.offset == 1.5 and corr.n_samples == 8
+    assert back.apps["a"]["intrinsic"] == "GEMM"
+
+
+def test_db_record_keeps_best_measured(tmp_path):
+    db = TuningDB(tmp_path / "db.json")
+    assert db.record(_rec(measured=2e-4))
+    assert db.record(_rec(measured=1e-4, blocks={"bm": 64, "bn": 64,
+                                                 "bk": 64}))
+    assert not db.record(_rec(measured=5e-4))    # worse: rejected
+    assert db.best_config("gemm", (64, 64, 64))["bm"] == 64
+
+
+def test_db_merge_on_save_two_runs(tmp_path):
+    """Two tuning runs (different apps/shapes) saving to one artifact
+    union their records; the better measured config wins shared keys."""
+    path = tmp_path / "db.json"
+    run1 = TuningDB(path)
+    run1.record(_rec(shape=(64, 64, 64), measured=2e-4, app="a"))
+    run1.set_app("a", {"intrinsic": "GEMM"})
+    run1.save()
+
+    run2 = TuningDB(path)                        # fresh, unaware of run1
+    run2.record(_rec(shape=(128, 128, 128), measured=3e-4, app="b"))
+    run2.record(_rec(shape=(64, 64, 64), measured=1e-4, app="b",
+                     blocks={"bm": 64, "bn": 64, "bk": 64}))
+    run2.set_app("b", {"intrinsic": "GEMV"})
+    run2.save()
+
+    merged = TuningDB.load(path)
+    assert set(merged.apps) == {"a", "b"}
+    assert merged.best_config("gemm", (128, 128, 128)) is not None
+    # run2's better measurement displaced run1's record for the shared key
+    assert merged.best_config("gemm", (64, 64, 64))["bm"] == 64
+
+
+def test_db_corrupt_artifact_loads_empty_with_warning(tmp_path):
+    path = tmp_path / "db.json"
+    path.write_text("}{ not json")
+    with pytest.warns(UserWarning, match="corrupt JSON"):
+        db = TuningDB.load(path)
+    assert not db.records and not db.apps
+    # and a save over it recovers a valid artifact
+    db.record(_rec())
+    db.save()
+    assert TuningDB.load(path).best_config("gemm", (64, 64, 64)) is not None
+
+
+def test_db_schema_invalid_sections_load_empty(tmp_path):
+    """Valid JSON with wrong-typed sections (hand edits, version skew) must
+    load as empty-with-warning, never raise — and a launch-time configure()
+    over a malformed app entry must fall back to defaults, not crash."""
+    from repro.kernels import ops
+
+    path = tmp_path / "db.json"
+    for payload in ('{"records": []}', '{"calibration": {"gemm": [1, 2]}}',
+                    '{"apps": {"myapp": "oops"}}'):
+        path.write_text(payload)
+        with pytest.warns(UserWarning):
+            db = TuningDB.load(path)
+        assert not db.records and not db.apps
+        assert not db.calibration.corrections
+
+    path.write_text('{"apps": {"myapp": "oops"}}')
+    ops.reset_dispatch()
+    ops.set_tuning_db(path)
+    try:
+        with pytest.warns(UserWarning):
+            assert ops.configure(app="myapp") == {}
+    finally:
+        ops.reset_dispatch()
+
+
+def test_db_malformed_record_dropped_not_fatal(tmp_path):
+    path = tmp_path / "db.json"
+    good = _rec().to_dict()
+    path.write_text(json.dumps({
+        "version": 1,
+        "records": {"bad": {"op": "gemm"},       # missing required fields
+                    "gemm|64x64x64|float32|interpret": good}}))
+    with pytest.warns(UserWarning, match="malformed record"):
+        db = TuningDB.load(path)
+    assert db.best_config("gemm", (64, 64, 64)) is not None
+    assert len(db.records) == 1
