@@ -34,6 +34,8 @@ from repro.core.sw_space import SoftwareSpace
 N_CANDIDATES = 1024
 TARGET_SPEEDUP = 10.0
 
+LAST_METRICS: dict = {}   # filled by main(); consumed by benchmarks/run.py
+
 
 def _population(wl, intrinsic: str, n: int, seed: int):
     """n random (hw, schedule) candidates for one workload × intrinsic."""
@@ -90,6 +92,14 @@ def main() -> None:
     ok = worst >= TARGET_SPEEDUP
     print(f"bench_batched_eval,summary,worst_speedup,{worst:.1f},"
           f"target,{TARGET_SPEEDUP:.0f},{'PASS' if ok else 'FAIL'}")
+    global LAST_METRICS
+    LAST_METRICS = {
+        "worst_speedup_batched": round(worst, 1),
+        "target_speedup": TARGET_SPEEDUP, "pass": ok,
+        "cases": {name: {"scalar_s": round(ts, 4), "batched_s": round(tb, 4),
+                         "cached_s": round(tc, 4)}
+                  for name, _, ts, tb, tc, _, _ in rows},
+    }
     if not ok:
         raise SystemExit(1)
 

@@ -23,6 +23,8 @@ import numpy as np
 POPULATION = 64
 TRAIN = 44
 
+LAST_METRICS: dict = {}   # filled by main(); consumed by benchmarks/run.py
+
 
 def build_population(wl, choice, n, seed=7):
     from repro.core.hw_primitives import HWConfig
@@ -87,6 +89,13 @@ def main() -> None:
     print(f"# held-out Spearman(analytical, measured): {before:.3f} -> "
           f"{after:.3f} after calibration "
           f"({'improved' if after > before else 'NOT improved'})")
+    global LAST_METRICS
+    LAST_METRICS = {
+        "population": POPULATION, "train": TRAIN,
+        "spearman_before": round(float(before), 3),
+        "spearman_after": round(float(after), 3),
+        "measure_s": round(t_measure, 1), "failures": int(n_fail),
+    }
 
 
 if __name__ == "__main__":

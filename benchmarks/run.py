@@ -6,40 +6,67 @@
   table3_codesign    Table III  co-design vs decoupled, edge/cloud power
   kernel_micro       host-side kernel microbenchmarks
   bench_batched_eval batched vs scalar cost-model evaluation throughput
+  bench_acquisition  vectorized Pareto/HVI engine vs per-candidate loops
+                     (DESIGN.md §9)
   bench_calibration  analytical-vs-measured rank correlation, before/after
                      per-op calibration (DESIGN.md §8)
 
-Each prints CSV; ``python -m benchmarks.run`` runs them all.
+Each prints CSV; ``python -m benchmarks.run`` runs them all and writes a
+machine-readable summary — per-benchmark name, key metrics (a module's
+``LAST_METRICS`` dict, when it publishes one), wall-clock, gate outcome — to
+``artifacts/bench_results.json`` so the perf trajectory is trackable across
+PRs.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+RESULTS_PATH = Path(__file__).resolve().parents[1] / "artifacts" / "bench_results.json"
+
 
 def main() -> None:
-    from benchmarks import (ablation_qlearning, bench_batched_eval,
-                            bench_calibration, fig7_intrinsics, fig10_hw_dse,
-                            fig11_sw_dse, kernel_micro, table3_codesign)
+    from benchmarks import (ablation_qlearning, bench_acquisition,
+                            bench_batched_eval, bench_calibration,
+                            fig7_intrinsics, fig10_hw_dse, fig11_sw_dse,
+                            kernel_micro, table3_codesign)
 
     failures = []
-    for mod in (kernel_micro, bench_batched_eval, bench_calibration,
-                fig7_intrinsics, fig11_sw_dse, fig10_hw_dse, table3_codesign,
-                ablation_qlearning):
-        name = mod.__name__.split(".")[-1]
-        print(f"# === {name} ===", flush=True)
-        t0 = time.time()
-        try:
-            mod.main()
-        except SystemExit as e:  # a gated benchmark (e.g. the 10x batched-
-            # eval target) must not abort the rest of the suite
-            if e.code:
-                failures.append(name)
-                print(f"# {name} FAILED its gate (exit {e.code})", flush=True)
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    results = []
+    try:
+        for mod in (kernel_micro, bench_batched_eval, bench_acquisition,
+                    bench_calibration, fig7_intrinsics, fig11_sw_dse,
+                    fig10_hw_dse, table3_codesign, ablation_qlearning):
+            name = mod.__name__.split(".")[-1]
+            print(f"# === {name} ===", flush=True)
+            t0 = time.time()
+            failed = False
+            try:
+                mod.main()
+            except SystemExit as e:  # a gated benchmark (e.g. the 10x
+                # batched-eval target) must not abort the rest of the suite
+                if e.code:
+                    failed = True
+                    failures.append(name)
+                    print(f"# {name} FAILED its gate (exit {e.code})",
+                          flush=True)
+            wall = time.time() - t0
+            print(f"# {name} done in {wall:.1f}s", flush=True)
+            results.append({"name": name, "wall_clock_s": round(wall, 3),
+                            "failed": failed,
+                            "metrics": getattr(mod, "LAST_METRICS", None)
+                            or {}})
+    finally:
+        # persist whatever completed even if a benchmark crashes outright
+        RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+        RESULTS_PATH.write_text(json.dumps(
+            {"generated_unix": int(time.time()), "results": results},
+            indent=2) + "\n")
+        print(f"# wrote {RESULTS_PATH}", flush=True)
     if failures:
         raise SystemExit(f"gated benchmarks failed: {', '.join(failures)}")
 

@@ -124,7 +124,8 @@ def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
 
 def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
              constraints: Constraints = None, target: str = "spatial",
-             n_trials: int = 20, n_init: int = 5, seed: int = 0,
+             n_trials: int = 20, n_init: int = 5, seed: int = 0, q: int = 1,
+             max_dse_extensions: int = 0,
              sw_budget: str = "small", space_axes: dict | None = None,
              cache=None, measure: bool = False,
              measure_backend: str = "interpret", measure_top_k: int = 3,
@@ -136,6 +137,15 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
     run — every intrinsic's hardware DSE, its inner software DSE, and the
     Step-3 full-budget refinement — so identical (hw, schedule) points probed
     in different steps are evaluated exactly once.
+
+    ``q`` is the MOBO suggestion batch size (DESIGN.md §9): each hardware-DSE
+    trial proposes ``q`` configs and scores them with one batched objectives
+    call, amortizing ``hw_objectives``'s inner software-DSE runs through the
+    shared cache.  ``max_dse_extensions`` enables the paper's constraint-
+    driven Step-3 extension: when no explored point satisfies the user
+    constraints, the hardware DSE is re-run with a doubled trial budget (up
+    to that many doublings) — the shared cache makes every previously-probed
+    point free, so an extension only pays for the *new* trials.
 
     With ``measure=True``, Step 3 closes the loop on measured truth
     (DESIGN.md §8): the top-``measure_top_k`` constraint-feasible Pareto
@@ -181,7 +191,15 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
             space = HWSpace(intrinsic, axes={**space.axes, **space_axes})
         f = hw_objectives(workloads, partition, intrinsic, target=target,
                           seed=seed, sw_budget=sw_budget, cache=cache)
-        res = mobo(space, f, n_init=n_init, n_trials=n_trials, seed=seed)
+        res = mobo(space, f, n_init=n_init, n_trials=n_trials, seed=seed, q=q)
+        bounds = constraints.as_bounds()
+        for ext in range(1, max_dse_extensions + 1):
+            if not bounds or res.best_under(bounds) is not None:
+                break
+            # constraint-driven extension (paper Fig. 3 Step 3): nothing on
+            # the frontier meets the constraints, so widen the search
+            res = mobo(space, f, n_init=n_init, seed=seed, q=q,
+                       n_trials=n_trials * (2 ** ext))
         per_intrinsic[intrinsic] = res
         evals += res.evaluations
 

@@ -2,7 +2,10 @@
 
 Standard elitist non-dominated sorting GA [Deb et al. 2002]: fast
 non-dominated sort, crowding distance, binary tournament, uniform crossover
-and ordinal mutation over the hardware design space encoding.
+and ordinal mutation over the hardware design space encoding.  Sorting and
+crowding are vectorized (one dominance matrix / one argsort per generation
+instead of the double Python loop over the dominance relation), and the
+hypervolume history rides the incremental front tracker (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -10,52 +13,47 @@ import numpy as np
 
 from .hw_space import HWSpace
 from .mobo import (BatchObjectives, DSEResult, Objectives, _finite_rows,
-                   as_batch)
-from .pareto import default_reference, hypervolume
+                   _log_rows, as_batch)
+from .pareto import IncrementalHV, default_reference
 
 
 def _fast_nondominated_sort(ys: np.ndarray) -> list[list[int]]:
+    """Deb's rank peeling on a vectorized dominance matrix: ``dom[p, q]`` is
+    "p dominates q"; rank-r members are those whose domination count hits
+    zero once ranks < r are peeled off."""
+    ys = np.asarray(ys, dtype=float)
     n = len(ys)
-    S = [[] for _ in range(n)]
-    counts = np.zeros(n, dtype=int)
-    fronts: list[list[int]] = [[]]
-    for p in range(n):
-        for q in range(n):
-            if p == q:
-                continue
-            if np.all(ys[p] <= ys[q]) and np.any(ys[p] < ys[q]):
-                S[p].append(q)
-            elif np.all(ys[q] <= ys[p]) and np.any(ys[q] < ys[p]):
-                counts[p] += 1
-        if counts[p] == 0:
-            fronts[0].append(p)
-    i = 0
-    while fronts[i]:
-        nxt: list[int] = []
-        for p in fronts[i]:
-            for q in S[p]:
-                counts[q] -= 1
-                if counts[q] == 0:
-                    nxt.append(q)
-        i += 1
-        fronts.append(nxt)
-    return fronts[:-1]
+    if n == 0:
+        return []
+    le = np.all(ys[:, None, :] <= ys[None, :, :], axis=-1)
+    lt = np.any(ys[:, None, :] < ys[None, :, :], axis=-1)
+    dom = le & lt
+    counts = dom.sum(axis=0).astype(np.int64)
+    fronts: list[list[int]] = []
+    current = np.flatnonzero(counts == 0)
+    while current.size:
+        fronts.append([int(i) for i in current])
+        counts -= dom[current].sum(axis=0)
+        counts[current] = -1            # retire assigned rows
+        current = np.flatnonzero(counts == 0)
+    return fronts
 
 
 def _crowding(ys: np.ndarray, front: list[int]) -> dict[int, float]:
-    dist = {i: 0.0 for i in front}
     if len(front) <= 2:
         return {i: np.inf for i in front}
-    arr = ys[front]
-    for m in range(ys.shape[1]):
-        order = np.argsort(arr[:, m])
-        span = arr[order[-1], m] - arr[order[0], m] or 1.0
-        dist[front[order[0]]] = np.inf
-        dist[front[order[-1]]] = np.inf
-        for k in range(1, len(front) - 1):
-            dist[front[order[k]]] += (arr[order[k + 1], m]
-                                      - arr[order[k - 1], m]) / span
-    return dist
+    arr = ys[front]                                  # (k, n_obj)
+    order = np.argsort(arr, axis=0)                  # per-objective ranking
+    svals = np.take_along_axis(arr, order, axis=0)
+    span = svals[-1] - svals[0]
+    span = np.where(span != 0, span, 1.0)
+    gaps = (svals[2:] - svals[:-2]) / span           # (k-2, n_obj)
+    contrib = np.zeros_like(arr)
+    np.put_along_axis(contrib, order[1:-1], gaps, axis=0)
+    dist = contrib.sum(axis=1)
+    dist[order[0]] = np.inf                          # boundary points
+    dist[order[-1]] = np.inf
+    return {front[k]: float(dist[k]) for k in range(len(front))}
 
 
 def nsga2(space: HWSpace, objectives: Objectives, *, pop_size: int = 5,
@@ -81,13 +79,13 @@ def nsga2(space: HWSpace, objectives: Objectives, *, pop_size: int = 5,
 
     fin = _finite_rows(all_ys)
     base = all_ys[fin] if fin.any() else np.ones((1, all_ys.shape[1]))
-    ref = default_reference(np.log10(np.maximum(base, 1e-30)), margin=1.3)
+    ref = default_reference(_log_rows(base), margin=1.3)
 
-    def hv_of(y):
-        m = _finite_rows(y)
-        return hypervolume(np.log10(np.maximum(y[m], 1e-30)), ref) if m.any() else 0.0
-
-    hv_history = [0.0] * (len(all_configs) - 1) + [hv_of(all_ys)]
+    tracker = IncrementalHV(ref)
+    for y in all_ys:
+        if np.all(np.isfinite(y)):
+            tracker.add(_log_rows(y))
+    hv_history = [0.0] * (len(all_configs) - 1) + [tracker.hv]
 
     pop_idx = list(range(len(configs)))
     while len(all_configs) < n_trials:
@@ -135,7 +133,9 @@ def nsga2(space: HWSpace, objectives: Objectives, *, pop_size: int = 5,
             new_idx.append(len(all_configs))
             all_configs.append(child)
             all_ys = np.vstack([all_ys, y[None, :]])
-            hv_history.append(hv_of(all_ys))
+            if np.all(np.isfinite(y)):
+                tracker.add(_log_rows(y))
+            hv_history.append(tracker.hv)
 
         # environmental selection on the union
         union = pop_idx + new_idx

@@ -5,8 +5,8 @@ import numpy as np
 
 from .hw_space import HWSpace
 from .mobo import (BatchObjectives, DSEResult, Objectives, _finite_rows,
-                   as_batch)
-from .pareto import default_reference, hypervolume
+                   _log_rows, as_batch)
+from .pareto import IncrementalHV, default_reference
 
 
 def random_search(space: HWSpace, objectives: Objectives, *,
@@ -19,13 +19,12 @@ def random_search(space: HWSpace, objectives: Objectives, *,
 
     fin = _finite_rows(ys)
     base = ys[fin] if fin.any() else np.ones((1, ys.shape[1]))
-    ref = default_reference(np.log10(np.maximum(base, 1e-30)), margin=1.3)
+    ref = default_reference(_log_rows(base), margin=1.3)
 
+    tracker = IncrementalHV(ref)
     hv_history = []
-    for i in range(1, len(configs) + 1):
-        sub = ys[:i]
-        m = _finite_rows(sub)
-        hv_history.append(
-            hypervolume(np.log10(np.maximum(sub[m], 1e-30)), ref)
-            if m.any() else 0.0)
+    for y in ys:
+        if np.all(np.isfinite(y)):
+            tracker.add(_log_rows(y))
+        hv_history.append(tracker.hv)
     return DSEResult(configs, ys, hv_history, len(configs), ref)

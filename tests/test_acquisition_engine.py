@@ -1,0 +1,180 @@
+"""Vectorized Pareto/hypervolume engine (DESIGN.md §9) vs the reference
+scalar implementations, on seeded random point sets.
+
+These run everywhere; the hypothesis-driven property variants live in
+``test_pareto_mobo.py`` (skipped when hypothesis is absent).
+"""
+import numpy as np
+import pytest
+
+from repro.core.nsga2 import _crowding, _fast_nondominated_sort
+from repro.core.pareto import (BoxDecomposition, IncrementalHV,
+                               _reference_hypervolume, _reference_pareto_mask,
+                               default_reference, hvi_batch, hypervolume,
+                               pareto_front, pareto_mask)
+
+
+def _random_sets(d, n_sets=25, seed=0):
+    """Random point clouds in [0, 10]^d, some with duplicated rows."""
+    rng = np.random.default_rng(seed + 97 * d)
+    for t in range(n_sets):
+        n = int(rng.integers(1, 40))
+        pts = rng.uniform(0, 10, (n, d))
+        if t % 3 == 0 and n > 1:  # duplicates exercise the tie handling
+            pts[int(rng.integers(n))] = pts[int(rng.integers(n))]
+        yield pts
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+def test_pareto_mask_matches_reference_exactly(d):
+    for pts in _random_sets(d):
+        assert np.array_equal(pareto_mask(pts), _reference_pareto_mask(pts))
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+def test_hypervolume_matches_reference(d):
+    ref = np.full(d, 11.0)
+    for pts in _random_sets(d):
+        hv = hypervolume(pts, ref)
+        hv_ref = _reference_hypervolume(pts, ref)
+        assert hv == pytest.approx(hv_ref, rel=1e-9, abs=1e-9)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_hvi_batch_equals_full_recompute_deltas(d):
+    rng = np.random.default_rng(5 + d)
+    ref = np.full(d, 11.0)
+    for _ in range(15):
+        front = rng.uniform(0, 10, (int(rng.integers(0, 25)), d))
+        cands = rng.uniform(-2, 12, (16, d))  # some beyond ref / below front
+        hvi = hvi_batch(front, ref, cands)
+        hv0 = hypervolume(front, ref)
+        deltas = [hypervolume(np.vstack([front, c[None]]), ref) - hv0
+                  for c in cands]
+        np.testing.assert_allclose(hvi, deltas, atol=1e-9)
+
+
+def test_hvi_batch_mc_consistent_beyond_3d():
+    """d > 3 falls back to Monte Carlo: deltas agree within sampling noise."""
+    rng = np.random.default_rng(11)
+    ref = np.full(4, 11.0)
+    front = rng.uniform(0, 10, (12, 4))
+    cands = rng.uniform(0, 10, (8, 4))
+    hvi = hvi_batch(front, ref, cands, mc_samples=200_000)
+    hv0 = hypervolume(front, ref)
+    deltas = np.array([hypervolume(np.vstack([front, c[None]]), ref) - hv0
+                       for c in cands])
+    scale = max(np.abs(deltas).max(), 1e-9)
+    assert np.abs(hvi - deltas).max() / scale < 0.05
+
+
+def test_hvi_nonfinite_candidates_contribute_nothing():
+    front = np.array([[1.0, 2.0], [2.0, 1.0]])
+    ref = np.array([4.0, 4.0])
+    cands = np.array([[np.inf, 0.0], [np.nan, 0.0], [0.5, 0.5]])
+    hvi = hvi_batch(front, ref, cands)
+    assert hvi[0] == 0.0 and hvi[1] == 0.0 and hvi[2] > 0.0
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_incremental_hv_matches_prefix_recompute(d):
+    rng = np.random.default_rng(3 + d)
+    ref = np.full(d, 11.0)
+    pts = rng.uniform(0, 10, (30, d))
+    tracker = IncrementalHV(ref)
+    for i, y in enumerate(pts):
+        tracker.add(y)
+        assert tracker.hv == pytest.approx(hypervolume(pts[: i + 1], ref),
+                                           rel=1e-9, abs=1e-9)
+    # the maintained front is the Pareto front of everything seen
+    np.testing.assert_allclose(np.sort(tracker.front, axis=0),
+                               np.sort(pareto_front(pts), axis=0))
+
+
+def test_incremental_hv_ignores_points_beyond_ref():
+    tracker = IncrementalHV(np.array([1.0, 1.0]))
+    tracker.add(np.array([0.5, 0.5]))
+    hv = tracker.hv
+    tracker.add(np.array([2.0, 0.1]))      # exceeds ref in dim 0
+    tracker.add(np.array([np.inf, 0.0]))   # infeasible
+    assert tracker.hv == hv and len(tracker.front) == 1
+
+
+def test_box_decomposition_partitions_whole_region():
+    """Σ box volumes (clipped to the bounding cell) + front hypervolume must
+    equal the cell volume: the boxes tile the non-dominated region."""
+    rng = np.random.default_rng(2)
+    for d in (2, 3):
+        pts = rng.uniform(0, 10, (20, d))
+        ref = np.full(d, 11.0)
+        front = pareto_front(pts)
+        lo_f = front.min(axis=0)
+        dec = BoxDecomposition(front, ref)
+        clipped = np.clip(dec._hi - np.maximum(dec._lo, lo_f), 0, None)
+        complement = clipped.prod(axis=1).sum()
+        cell = np.prod(ref - lo_f)
+        assert complement + hypervolume(front, ref) == pytest.approx(
+            cell, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II vectorized sort / crowding vs brute force
+# ---------------------------------------------------------------------------
+
+def _bruteforce_ranks(ys):
+    n = len(ys)
+    dom = [[bool(np.all(ys[p] <= ys[q]) and np.any(ys[p] < ys[q]))
+            for q in range(n)] for p in range(n)]
+    rank = [-1] * n
+    r = 0
+    while -1 in rank:
+        this = [q for q in range(n) if rank[q] == -1 and
+                not any(dom[p][q] and rank[p] == -1 for p in range(n))]
+        for q in this:
+            rank[q] = r
+        r += 1
+    return rank
+
+
+def test_nd_sort_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n = int(rng.integers(2, 30))
+        ys = rng.uniform(0, 1, (n, 3))
+        ys[rng.integers(n)] = ys[rng.integers(n)]  # duplicate row
+        fronts = _fast_nondominated_sort(ys)
+        want = _bruteforce_ranks(ys)
+        got = [-1] * n
+        for r, f in enumerate(fronts):
+            for i in f:
+                got[i] = r
+        assert got == want
+
+
+def test_crowding_matches_reference_loop():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        n = int(rng.integers(3, 20))
+        ys = rng.uniform(0, 1, (n, 3))
+        front = list(range(n))
+        got = _crowding(ys, front)
+        # the pre-vectorization per-objective loop
+        want = {i: 0.0 for i in front}
+        arr = ys[front]
+        for m in range(ys.shape[1]):
+            order = np.argsort(arr[:, m])
+            span = arr[order[-1], m] - arr[order[0], m] or 1.0
+            want[front[order[0]]] = np.inf
+            want[front[order[-1]]] = np.inf
+            for k in range(1, n - 1):
+                if not np.isinf(want[front[order[k]]]):
+                    want[front[order[k]]] += (arr[order[k + 1], m]
+                                              - arr[order[k - 1], m]) / span
+        for i in front:
+            assert got[i] == pytest.approx(want[i])
+
+
+def test_default_reference_unchanged():
+    pts = np.array([[1.0, 5.0], [3.0, 2.0]])
+    ref = default_reference(pts, margin=1.1)
+    assert np.all(ref > pts.max(axis=0))

@@ -9,8 +9,9 @@ from hypothesis import given, settings
 from repro.core.hw_space import HWSpace
 from repro.core.mobo import mobo, rescore_hv_history, shared_reference
 from repro.core.nsga2 import nsga2
-from repro.core.pareto import (default_reference, dominates, hypervolume,
-                               pareto_front, pareto_mask)
+from repro.core.pareto import (_reference_hypervolume, _reference_pareto_mask,
+                               default_reference, dominates, hvi_batch,
+                               hypervolume, pareto_front, pareto_mask)
 from repro.core.random_search import random_search
 from repro.core.surrogate import GP
 
@@ -31,6 +32,42 @@ def test_pareto_mask_matches_bruteforce(pts):
         dominated = any(dominates(arr[j], arr[i]) for j in range(len(arr))
                         if j != i)
         assert mask[i] == (not dominated)
+
+
+@st.composite
+def _point_sets(draw, dmax=4, nmax=24):
+    """Random (n, d) clouds in [0, 10]^d, d in {1, .., dmax}."""
+    d = draw(st.integers(1, dmax))
+    n = draw(st.integers(1, nmax))
+    vals = draw(st.lists(st.floats(0, 10), min_size=n * d, max_size=n * d))
+    return np.array(vals).reshape(n, d)
+
+
+@given(_point_sets())
+@settings(max_examples=60, deadline=None)
+def test_vectorized_mask_matches_reference(pts):
+    assert np.array_equal(pareto_mask(pts), _reference_pareto_mask(pts))
+
+
+@given(_point_sets())
+@settings(max_examples=60, deadline=None)
+def test_vectorized_hypervolume_matches_reference(pts):
+    ref = np.full(pts.shape[1], 11.0)
+    assert hypervolume(pts, ref) == pytest.approx(
+        _reference_hypervolume(pts, ref), rel=1e-9, abs=1e-9)
+
+
+@given(_point_sets(dmax=3), _point_sets(dmax=3))
+@settings(max_examples=40, deadline=None)
+def test_hvi_batch_equals_recompute_deltas(front, cands):
+    if front.shape[1] != cands.shape[1]:
+        return
+    ref = np.full(front.shape[1], 11.0)
+    hv0 = hypervolume(front, ref)
+    deltas = [hypervolume(np.vstack([front, c[None]]), ref) - hv0
+              for c in cands]
+    np.testing.assert_allclose(hvi_batch(front, ref, cands), deltas,
+                               atol=1e-9)
 
 
 def test_hypervolume_2d_exact():

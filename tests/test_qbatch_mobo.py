@@ -1,0 +1,93 @@
+"""q-batch MOBO acquisition (DESIGN.md §9) + the shared_reference fix.
+
+No hypothesis dependency — these run everywhere.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.codesign import Constraints, codesign
+from repro.core.hw_space import HWSpace
+from repro.core.mobo import (DSEResult, mobo, rescore_hv_history,
+                             shared_reference)
+
+
+def _toy(hw):
+    """Synthetic 3-objective surface over the hardware space."""
+    n = hw.pe_rows * hw.pe_cols
+    return (1.0 / n + hw.burst_bytes * 1e-9,
+            n * 1e-3 + hw.vmem_kib * 1e-4,
+            n * 10.0 + hw.vmem_kib * 5.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_q1_reproduces_reference_acquisition(seed):
+    """Same seed, q=1: the vectorized engine must pick the exact same config
+    sequence as the pre-engine per-candidate loops, with matching
+    hypervolume histories."""
+    space = HWSpace("GEMM")
+    res_v = mobo(space, _toy, n_init=5, n_trials=12, seed=seed)
+    res_r = mobo(space, _toy, n_init=5, n_trials=12, seed=seed,
+                 acquisition="reference")
+    assert ([c.encode() for c in res_v.configs]
+            == [c.encode() for c in res_r.configs])
+    np.testing.assert_allclose(res_v.hv_history, res_r.hv_history,
+                               rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", [2, 3])
+def test_qbatch_never_duplicates_and_keeps_hv_at_equal_budget(seed):
+    """Fixed toy space, equal 21-evaluation budget: q=4 must evaluate 21
+    distinct configs and end at a hypervolume >= the q=1 run's."""
+    space = HWSpace("GEMM")
+    res1 = mobo(space, _toy, n_init=5, n_trials=21, seed=seed)
+    res4 = mobo(space, _toy, n_init=5, n_trials=21, seed=seed, q=4)
+    enc = [c.encode() for c in res4.configs]
+    assert len(enc) == len(set(enc))
+    assert res4.evaluations == 21 == len(res4.hv_history)
+    assert res4.hv_history[-1] >= res1.hv_history[-1] - 1e-12
+
+
+def test_qbatch_respects_trial_budget_midbatch():
+    """The last round is clipped so q-batches never overshoot n_trials."""
+    space = HWSpace("GEMM")
+    res = mobo(space, _toy, n_init=4, n_trials=10, seed=0, q=4)
+    assert res.evaluations == 10 and len(res.configs) == 10
+
+
+def test_acquisition_engine_validation():
+    space = HWSpace("GEMM")
+    with pytest.raises(ValueError):
+        mobo(space, _toy, acquisition="nope")
+    with pytest.raises(ValueError):
+        mobo(space, _toy, acquisition="reference", q=2)
+
+
+def test_shared_reference_all_infeasible_returns_finite():
+    ys = np.full((3, 3), math.inf)
+    res = DSEResult([], ys, [0.0] * 3, 3, np.ones(3))
+    ref = shared_reference([res, res])
+    assert ref.shape == (3,) and np.all(np.isfinite(ref))
+    assert rescore_hv_history(res, ref) == [0.0, 0.0, 0.0]
+    assert np.all(np.isfinite(shared_reference([])))
+
+
+def test_codesign_threads_q_through_hw_dse():
+    wl = [W.gemm(128, 128, 128, name="g")]
+    rep = codesign(wl, intrinsics=["GEMM"], n_trials=6, n_init=3, seed=0,
+                   q=3)
+    assert rep.solution is not None
+    assert rep.per_intrinsic["GEMM"].evaluations == 6
+
+
+def test_codesign_constraint_driven_extension():
+    """Unsatisfiable constraints + max_dse_extensions: the hardware DSE is
+    re-run at a doubled trial budget before giving up."""
+    wl = [W.gemm(128, 128, 128, name="g")]
+    rep = codesign(wl, intrinsics=["GEMM"], n_trials=3, n_init=2, seed=1,
+                   constraints=Constraints(latency_s=1e-30),
+                   max_dse_extensions=1, q=2)
+    assert rep.solution is None
+    assert rep.per_intrinsic["GEMM"].evaluations == 6   # 3 * 2**1
