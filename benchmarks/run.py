@@ -8,6 +8,8 @@
   bench_batched_eval batched vs scalar cost-model evaluation throughput
   bench_acquisition  vectorized Pareto/HVI engine vs per-candidate loops
                      (DESIGN.md §9)
+  bench_sw_dse       lock-step batched software-DSE engine vs sequential
+                     per-search reference (DESIGN.md §10)
   bench_calibration  analytical-vs-measured rank correlation, before/after
                      per-op calibration (DESIGN.md §8)
 
@@ -32,15 +34,16 @@ RESULTS_PATH = Path(__file__).resolve().parents[1] / "artifacts" / "bench_result
 def main() -> None:
     from benchmarks import (ablation_qlearning, bench_acquisition,
                             bench_batched_eval, bench_calibration,
-                            fig7_intrinsics, fig10_hw_dse, fig11_sw_dse,
-                            kernel_micro, table3_codesign)
+                            bench_sw_dse, fig7_intrinsics, fig10_hw_dse,
+                            fig11_sw_dse, kernel_micro, table3_codesign)
 
     failures = []
     results = []
     try:
         for mod in (kernel_micro, bench_batched_eval, bench_acquisition,
-                    bench_calibration, fig7_intrinsics, fig11_sw_dse,
-                    fig10_hw_dse, table3_codesign, ablation_qlearning):
+                    bench_sw_dse, bench_calibration, fig7_intrinsics,
+                    fig11_sw_dse, fig10_hw_dse, table3_codesign,
+                    ablation_qlearning):
             name = mod.__name__.split(".")[-1]
             print(f"# === {name} ===", flush=True)
             t0 = time.time()

@@ -12,13 +12,15 @@ from .matching import TensorizeChoice, match, partition_space
 from .mobo import mobo
 from .nsga2 import nsga2
 from .random_search import random_search
+from .sw_dse import SearchSpec, SWResult, run_searches
 from .sw_primitives import Schedule
 from .tst import TensorExpr, parse
 
 __all__ = [
     "ALL_INTRINSICS", "Constraints", "CostReport", "EvalCache", "HWBuilder",
-    "HWConfig", "HWSpace", "Schedule", "Solution", "TensorExpr",
-    "TensorizeChoice", "codesign", "evaluate", "evaluate_batch",
-    "evaluate_batch_reports", "match", "mobo", "nsga2", "parse",
-    "partition_space", "random_search", "separate_design",
+    "HWConfig", "HWSpace", "SWResult", "Schedule", "SearchSpec", "Solution",
+    "TensorExpr", "TensorizeChoice", "codesign", "evaluate",
+    "evaluate_batch", "evaluate_batch_reports", "match", "mobo", "nsga2",
+    "parse", "partition_space", "random_search", "run_searches",
+    "separate_design",
 ]

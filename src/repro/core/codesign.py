@@ -88,44 +88,102 @@ class CodesignReport:
 
 def hw_objectives(workloads: list[TensorExpr], partition, intrinsic: str,
                   *, target: str = "spatial", seed: int = 0,
-                  sw_budget: str = "small", cache=None):
+                  sw_budget: str = "small", cache=None,
+                  engine: str = "batched"):
     """The paper's correlated objective: evaluating a hardware point runs the
     software DSE and reports the *achieved* latency plus power/area.
 
-    ``cache`` (an :class:`~repro.core.cost_model.EvalCache`) is threaded into
-    the inner software DSE and the final per-schedule rescore, so hardware
-    points probed by several explorers — or re-refined at a bigger software
-    budget in Step 3 — never re-derive a (hw, schedule) evaluation.
+    Scalar protocol — one config per call; :func:`hw_objectives_batch` is the
+    production form the MOBO loop uses.  ``cache`` (an
+    :class:`~repro.core.cost_model.EvalCache`) is threaded into the inner
+    software DSE and the final per-schedule rescore, so hardware points
+    probed by several explorers — or re-refined at a bigger software budget
+    in Step 3 — never re-derive a (hw, schedule) evaluation.
     """
-    from .cost_model import TARGETS, accelerator_area, evaluate
+    fbatch = hw_objectives_batch(workloads, partition, intrinsic,
+                                 target=target, seed=seed,
+                                 sw_budget=sw_budget, cache=cache,
+                                 engine=engine)
 
     def f(hw: HWConfig) -> tuple[float, float, float]:
-        results = sw_dse.optimize_set(workloads, partition, hw,
-                                      target=target, seed=seed,
-                                      budget=sw_budget, cache=cache)
-        if not results:
-            return (math.inf, math.inf, math.inf)
-        lat = sw_dse.total_latency(results)
-        # power: energy-weighted average across workloads at their schedules
-        e_tot = 0.0
-        for w in workloads:
-            r = results.get(w.name)
-            if r is None:
-                return (math.inf, math.inf, math.inf)
-            rep = evaluate(w, r.schedule, hw, target, cache=cache)
-            if not rep.legal:
-                return (math.inf, math.inf, math.inf)
-            e_tot += rep.energy_j
-        tgt = TARGETS[target]
-        return (lat, e_tot / max(lat, 1e-12), accelerator_area(hw, tgt))
+        return tuple(fbatch([hw])[0])
 
     return f
+
+
+def hw_objectives_batch(workloads: list[TensorExpr], partition,
+                        intrinsic: str, *, target: str = "spatial",
+                        seed: int = 0, sw_budget: str = "small", cache=None,
+                        engine: str = "batched"):
+    """Batched hardware objectives (DESIGN.md §10): score a whole population
+    of hardware candidates — a ``mobo(q=N)`` trial's picks, or the initial
+    design — by resolving all ``len(configs) × len(workloads)`` software
+    searches in ONE lock-step engine pass, then rescoring every winning
+    schedule's energy through one batched cost-model call per workload."""
+    from .cost_model import TARGETS, accelerator_area, evaluate_batch_reports
+
+    tgt = TARGETS[target]
+
+    def fbatch(configs) -> np.ndarray:
+        configs = list(configs)
+        specs: list[sw_dse.SearchSpec] = []
+        owners: list[tuple[int, str]] = []
+        for ci, hw in enumerate(configs):
+            for n, w in enumerate(workloads):
+                choices = partition.get((w.name, hw.intrinsic), [])
+                if choices:
+                    specs.append(sw_dse.SearchSpec(w, choices, hw,
+                                                   seed + 17 * n))
+                    owners.append((ci, w.name))
+        results = sw_dse.run_searches(specs, target=target, cache=cache,
+                                      engine=engine,
+                                      **sw_dse.BUDGETS[sw_budget])
+        per_config: list[dict[str, sw_dse.SWResult]] = \
+            [{} for _ in configs]
+        for (ci, wname), r in zip(owners, results):
+            per_config[ci][wname] = r
+
+        # energy rescore of every config's winning schedules: one batched
+        # cost-model pass per workload over all configs (cache-hot anyway —
+        # each schedule was just evaluated by its own search)
+        rescore: dict[str, tuple] = {}
+        for ci, res in enumerate(per_config):
+            if set(res) != {w.name for w in workloads}:
+                continue
+            for w in workloads:
+                g = rescore.setdefault(w.name, (w, [], [], []))
+                g[1].append(configs[ci])
+                g[2].append(res[w.name].schedule)
+                g[3].append(ci)
+        reps_of: dict[tuple[int, str], object] = {}
+        for w, hws, scheds, cis in rescore.values():
+            reps = evaluate_batch_reports(w, hws, scheds, target, cache=cache)
+            for ci, rep in zip(cis, reps):
+                reps_of[(ci, w.name)] = rep
+
+        ys = np.full((len(configs), 3), math.inf)
+        for ci, (hw, res) in enumerate(zip(configs, per_config)):
+            if set(res) != {w.name for w in workloads}:
+                continue
+            lat = sw_dse.total_latency(res)
+            e_tot = 0.0
+            for w in workloads:
+                rep = reps_of[(ci, w.name)]
+                if not rep.legal:
+                    break
+                e_tot += rep.energy_j
+            else:
+                ys[ci] = (lat, e_tot / max(lat, 1e-12),
+                          accelerator_area(hw, tgt))
+        return ys
+
+    return fbatch
 
 
 def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
              constraints: Constraints = None, target: str = "spatial",
              n_trials: int = 20, n_init: int = 5, seed: int = 0, q: int = 1,
-             max_dse_extensions: int = 0,
+             max_dse_extensions: int = 0, engine: str = "batched",
              sw_budget: str = "small", space_axes: dict | None = None,
              cache=None, measure: bool = False,
              measure_backend: str = "interpret", measure_top_k: int = 3,
@@ -140,8 +198,10 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
 
     ``q`` is the MOBO suggestion batch size (DESIGN.md §9): each hardware-DSE
     trial proposes ``q`` configs and scores them with one batched objectives
-    call, amortizing ``hw_objectives``'s inner software-DSE runs through the
-    shared cache.  ``max_dse_extensions`` enables the paper's constraint-
+    call, which resolves the trial's q × len(workloads) software searches in
+    a single lock-step engine pass (DESIGN.md §10; ``engine="reference"``
+    keeps the sequential per-search path with identical same-seed results).
+    ``max_dse_extensions`` enables the paper's constraint-
     driven Step-3 extension: when no explored point satisfies the user
     constraints, the hardware DSE is re-run with a doubled trial budget (up
     to that many doublings) — the shared cache makes every previously-probed
@@ -189,17 +249,23 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
         space = HWSpace(intrinsic)
         if space_axes:
             space = HWSpace(intrinsic, axes={**space.axes, **space_axes})
-        f = hw_objectives(workloads, partition, intrinsic, target=target,
-                          seed=seed, sw_budget=sw_budget, cache=cache)
-        res = mobo(space, f, n_init=n_init, n_trials=n_trials, seed=seed, q=q)
+        fb = hw_objectives_batch(workloads, partition, intrinsic,
+                                 target=target, seed=seed,
+                                 sw_budget=sw_budget, cache=cache,
+                                 engine=engine)
+        # scalar fallback view of the same batch objective (mobo only calls
+        # it when batch_objectives is absent, i.e. never here)
+        f = lambda hw: tuple(fb([hw])[0])
+        res = mobo(space, f, batch_objectives=fb, n_init=n_init,
+                   n_trials=n_trials, seed=seed, q=q)
         bounds = constraints.as_bounds()
         for ext in range(1, max_dse_extensions + 1):
             if not bounds or res.best_under(bounds) is not None:
                 break
             # constraint-driven extension (paper Fig. 3 Step 3): nothing on
             # the frontier meets the constraints, so widen the search
-            res = mobo(space, f, n_init=n_init, seed=seed, q=q,
-                       n_trials=n_trials * (2 ** ext))
+            res = mobo(space, f, batch_objectives=fb, n_init=n_init,
+                       seed=seed, q=q, n_trials=n_trials * (2 ** ext))
         per_intrinsic[intrinsic] = res
         evals += res.evaluations
 
@@ -212,7 +278,8 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
             # the shared cache makes every Step-2 probe of this point free
             results = sw_dse.optimize_set(workloads, partition, hw,
                                           target=target, seed=seed,
-                                          budget="full", cache=cache)
+                                          budget="full", cache=cache,
+                                          engine=engine)
             lat = sw_dse.total_latency(results)
             sol = Solution(hw, {k: r.schedule for k, r in results.items()},
                            min(lat, y[0]), y[1], y[2], intrinsic)
@@ -224,7 +291,7 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
         sol, rank, summary = _measure_rerank(
             workloads, partition, res, constraints, intrinsic, target, seed,
             cache, measure_opts, measure_top_k, calib_samples,
-            measure_points)
+            measure_points, engine=engine)
         if summary:
             measured_summary[intrinsic] = summary
         if sol is not None and (best is None or rank < best_rank):
@@ -246,7 +313,8 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
 def _measure_rerank(workloads, partition, res: DSEResult,
                     constraints: Constraints, intrinsic: str, target: str,
                     seed: int, cache, measure_opts, top_k: int,
-                    calib_samples: list, measure_points: list
+                    calib_samples: list, measure_points: list,
+                    engine: str = "batched"
                     ) -> tuple[Solution | None, tuple[int, float] | None,
                                dict]:
     """Measured Step 3 for one intrinsic: refine the top feasible candidates
@@ -271,7 +339,8 @@ def _measure_rerank(workloads, partition, res: DSEResult,
     for i in cand_idx:
         hw, y = res.configs[i], res.ys[i]
         results = sw_dse.optimize_set(workloads, partition, hw, target=target,
-                                      seed=seed, budget="full", cache=cache)
+                                      seed=seed, budget="full", cache=cache,
+                                      engine=engine)
         if set(r for r in results) != {w.name for w in workloads}:
             continue
         total = 0.0

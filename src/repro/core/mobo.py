@@ -12,8 +12,11 @@ and both the candidate prefilter and the MC draws are scored through one
 greedy sequential hypervolume improvement with in-loop fantasy-front
 augmentation — so a whole population per trial flows through
 ``batch_objectives`` (and, in the co-design flow, through the shared
-``EvalCache``).  ``acquisition="reference"`` keeps the pre-engine
-per-candidate scoring loops for parity benchmarks.
+``EvalCache``).  In the co-design flow, ``batch_objectives`` is
+``hw_objectives_batch``: the trial's q × len(workloads) inner software
+searches resolve in ONE lock-step batched-DSE engine pass (DESIGN.md
+§10).  ``acquisition="reference"`` keeps the pre-engine per-candidate
+scoring loops for parity benchmarks.
 """
 from __future__ import annotations
 

@@ -5,6 +5,18 @@ which predicts Q-values.  The DQN is reused for all design points in a
 software space."  Implemented in pure JAX: a 4-layer MLP, a numpy replay
 buffer, epsilon-greedy action selection, TD(0) targets with a slow target
 network, Adam updates — all jitted and CPU-friendly.
+
+Two drivers share the same math (DESIGN.md §10):
+
+  * :class:`DQN`     — one agent, one software space.  Used by the scalar
+    ``engine="reference"`` DSE path.
+  * :class:`DQNBank` — N independent agents advanced in lock-step by the
+    batched DSE engine: parameters are stacked along a leading search axis,
+    action selection is one vmapped forward over every search's frontier,
+    and a round's N×k (record, train) transitions run as a single jitted
+    ``lax.scan`` vmapped across searches.  Each agent replicates the exact
+    update cadence and RNG stream of a standalone :class:`DQN`, which is
+    what makes batched-vs-reference parity bit-exact.
 """
 from __future__ import annotations
 
@@ -42,28 +54,13 @@ def _td_loss(params, target_params, s, a, r, s2, done, gamma):
     return jnp.mean((q_sa - jax.lax.stop_gradient(target)) ** 2)
 
 
-@jax.jit
-def _adam_step(params, grads, m, v, t, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
-    def upd(p, g, m_, v_):
-        m2 = b1 * m_ + (1 - b1) * g
-        v2 = b2 * v_ + (1 - b2) * g * g
-        mh = m2 / (1 - b1 ** t)
-        vh = v2 / (1 - b2 ** t)
-        return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
-
-    flat_p, tree = jax.tree_util.tree_flatten(params)
-    flat_g = jax.tree_util.tree_leaves(grads)
-    flat_m = jax.tree_util.tree_leaves(m)
-    flat_v = jax.tree_util.tree_leaves(v)
-    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
-           zip(flat_p, flat_g, flat_m, flat_v)]
-    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
-    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
-    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
-    return new_p, new_m, new_v
+def _lift(tree):
+    """Add a leading singleton search axis: one DQN as a 1-slot bank."""
+    return jax.tree_util.tree_map(lambda x: x[None], tree)
 
 
-_grad_loss = jax.jit(jax.grad(_td_loss))
+def _drop(tree):
+    return jax.tree_util.tree_map(lambda x: x[0], tree)
 
 
 @dataclass
@@ -104,7 +101,9 @@ class DQN:
                  gamma: float = 0.9, seed: int = 0, buffer: int = 4096):
         key = jax.random.PRNGKey(seed)
         sizes = (n_features, hidden, hidden, hidden, n_actions)
-        self.params = _init_mlp(key, sizes)
+        # 1-slot instance of the bank's stacked init: same compiled program
+        # as DQNBank => bit-identical weights between the two drivers
+        self.params = _drop(_bank_init(key[None], sizes))
         self.target_params = jax.tree_util.tree_map(lambda x: x, self.params)
         self.m = jax.tree_util.tree_map(jnp.zeros_like, self.params)
         self.v = jax.tree_util.tree_map(jnp.zeros_like, self.params)
@@ -121,8 +120,11 @@ class DQN:
         return np.asarray(_forward(self.params, jnp.asarray(feat[None, :])))[0]
 
     def q_values_batch(self, feats: np.ndarray) -> np.ndarray:
-        """Q-values for a whole state batch, one network forward: (B, A)."""
-        return np.asarray(_forward(self.params, jnp.asarray(feats)))
+        """Q-values for a whole state batch, one network forward: (B, A).
+        Runs the same compiled program as ``DQNBank`` (as a 1-slot bank) so
+        both engines see bit-identical Q-values."""
+        return np.asarray(_dqn_forward(self.params,
+                                       jnp.asarray(feats, jnp.float32)))
 
     def select(self, feat: np.ndarray) -> int:
         """Epsilon-greedy revision choice (the paper applies the highest-Q
@@ -146,20 +148,207 @@ class DQN:
                         np.asarray(s2, np.float32), done)
 
     def train_step(self, batch: int = 32):
+        """One TD(0) update; returns the minibatch loss (pre-update, straight
+        from the same ``value_and_grad`` pass as the gradients — no extra
+        network forward just to report a scalar).  Dispatches ONE jitted
+        call: the same N=1, m=1 instance of the program ``DQNBank`` runs
+        per round, so reference and lock-step weight trajectories are
+        bit-identical."""
         if self.replay.n < batch:
             return None
         s, a, r, s2, done = self.replay.sample(self.rng, batch)
+        (self.params, self.target_params, self.m, self.v), loss = \
+            _dqn_train_step(self.params, self.target_params, self.m, self.v,
+                            np.int32(self.t), jnp.asarray(s), jnp.asarray(a),
+                            jnp.asarray(r), jnp.asarray(s2),
+                            jnp.asarray(done), self.gamma)
         self.t += 1
-        grads = _grad_loss(self.params, self.target_params,
-                           jnp.asarray(s), jnp.asarray(a), jnp.asarray(r),
-                           jnp.asarray(s2), jnp.asarray(done),
-                           self.gamma)
-        self.params, self.m, self.v = _adam_step(
-            self.params, grads, self.m, self.v, float(self.t))
-        if self.t % 25 == 0:
-            self.target_params = jax.tree_util.tree_map(
-                lambda x: x, self.params)
         self.eps = max(self.eps_min, self.eps * self.eps_decay)
-        return float(_td_loss(self.params, self.target_params,
-                              jnp.asarray(s), jnp.asarray(a), jnp.asarray(r),
-                              jnp.asarray(s2), jnp.asarray(done), self.gamma))
+        return float(loss)
+
+
+# ---------------------------------------------------------------------------
+# DQNBank: N per-search agents advanced in lock-step (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("sizes",))
+def _bank_init(keys, sizes):
+    """Stacked per-search MLP init: one compiled call, same per-key values as
+    N standalone ``_init_mlp`` calls."""
+    return jax.vmap(lambda k: _init_mlp(k, sizes))(keys)
+
+
+_bank_forward = jax.jit(jax.vmap(_forward))
+
+
+def _bank_step(gamma, carry, inp):
+    """One train step of one agent — the body of the per-round scan, and
+    (at N=1, m=1) the whole of ``DQN.train_step``: TD(0) loss + grads from
+    one ``value_and_grad`` pass over the (pre-gathered) minibatch, Adam,
+    slow target sync every 25 updates.  ``do_train`` masks the whole update
+    (padding of ragged rounds).  Reference and batched engines share THIS
+    compiled program, which is what makes their weight trajectories — not
+    just their decisions — bit-identical."""
+    params, target, m, v, t = carry
+    bs, ba, br, bs2, bd, do_train = inp
+
+    loss, grads = jax.value_and_grad(_td_loss)(params, target, bs, ba, br,
+                                               bs2, bd, gamma)
+    t2 = t + do_train.astype(jnp.int32)
+    tf = t2.astype(jnp.float32)
+    lr, b1, b2, eps = 1e-3, 0.9, 0.999, 1e-8
+
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** tf)
+        vh = v2 / (1 - b2 ** tf)
+        return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
+           zip(flat_p, jax.tree_util.tree_leaves(grads),
+               jax.tree_util.tree_leaves(m), jax.tree_util.tree_leaves(v))]
+    pick = lambda new, old: jnp.where(do_train, new, old)
+    params = jax.tree_util.tree_unflatten(
+        tree, [pick(o[0], p) for o, p in zip(out, flat_p)])
+    m = jax.tree_util.tree_unflatten(
+        tree, [pick(o[1], x) for o, x in
+               zip(out, jax.tree_util.tree_leaves(m))])
+    v = jax.tree_util.tree_unflatten(
+        tree, [pick(o[2], x) for o, x in
+               zip(out, jax.tree_util.tree_leaves(v))])
+    sync = do_train & (t2 % 25 == 0)
+    target = jax.tree_util.tree_map(
+        lambda tp, p: jnp.where(sync, p, tp), target, params)
+    return (params, target, m, v, t2), loss
+
+
+@jax.jit
+def _bank_train_steps(params, target, m, v, t, S, A, R, S2, D, DT, gamma):
+    """A whole round's training work in one dispatch: scan over each agent's
+    (up to) m sequential train steps, vmapped across the N agents.  Returns
+    the updated agent state and the per-step losses (N, m)."""
+
+    def per_search(params, target, m, v, t, S, A, R, S2, D, DT):
+        return jax.lax.scan(partial(_bank_step, gamma),
+                            (params, target, m, v, t),
+                            (S, A, R, S2, D, DT))
+
+    return jax.vmap(per_search)(params, target, m, v, t, S, A, R, S2, D, DT)
+
+
+@jax.jit
+def _dqn_forward(params, x):
+    """Single-DQN forward as a 1-slot bank (lift/drop fuse away under jit)."""
+    return _bank_forward(_lift(params), x[None])[0]
+
+
+@jax.jit
+def _dqn_train_step(params, target, m, v, t, s, a, r, s2, d, gamma):
+    """Single-DQN train step: the N=1, m=1 instance of the bank scan, with
+    the lift/drop reshapes inside the compiled program."""
+    (p, tp, m2, v2, t2), loss = _bank_train_steps(
+        _lift(params), _lift(target), _lift(m), _lift(v),
+        jnp.reshape(t, (1,)), s[None, None], a[None, None], r[None, None],
+        s2[None, None], d[None, None], jnp.ones((1, 1), bool), gamma)
+    return (_drop(p), _drop(tp), _drop(m2), _drop(v2)), loss[0, 0]
+
+
+class DQNBank:
+    """N independent per-search DQNs advanced in lock-step.
+
+    Each slot replicates a standalone ``DQN(n_features, n_actions, seed=s)``
+    bit-for-bit: same init key, same numpy action/sample RNG stream, same
+    epsilon schedule, same Adam/target cadence.  What changes is the
+    execution shape — parameters are stacked along a leading search axis so
+    one vmapped forward scores every search's frontier (:meth:`select_round`)
+    and one jitted vmapped scan applies every search's round of replay
+    inserts + train steps (:meth:`train_round`).
+    """
+
+    def __init__(self, n_features: int, n_actions: int, seeds: list[int],
+                 hidden: int = 64, gamma: float = 0.9, buffer: int = 4096,
+                 batch: int = 32):
+        sizes = (n_features, hidden, hidden, hidden, n_actions)
+        keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+        self.params = _bank_init(keys, sizes)
+        self.target_params = jax.tree_util.tree_map(lambda x: x, self.params)
+        self.m = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        self.v = jax.tree_util.tree_map(jnp.zeros_like, self.params)
+        N = len(seeds)
+        self.n_searches = N
+        self.n_actions = n_actions
+        self.gamma = gamma
+        self.batch = batch
+        self.t = jnp.zeros(N, jnp.int32)
+        self.replays = [Replay(buffer) for _ in seeds]
+        self.rngs = [np.random.default_rng(s) for s in seeds]
+        self.eps = np.full(N, 1.0)
+        self.eps_min = 0.05
+        self.eps_decay = 0.97
+
+    def q_values_round(self, feats: np.ndarray) -> np.ndarray:
+        """Q-values for every search's frontier, one vmapped forward:
+        feats (N, k, F) -> (N, k, A)."""
+        return np.asarray(_bank_forward(self.params,
+                                        jnp.asarray(feats, jnp.float32)))
+
+    def select_round(self, feats: np.ndarray) -> np.ndarray:
+        """Epsilon-greedy actions for all N frontiers in one network pass;
+        per-search exploration noise drawn from that search's own RNG in the
+        same order a standalone ``DQN.select_batch`` would (int (N, k))."""
+        q = self.q_values_round(np.asarray(feats, np.float32))
+        greedy = np.argmax(q, axis=2)
+        N, k = greedy.shape
+        acts = np.empty((N, k), dtype=int)
+        for s in range(N):
+            explore = self.rngs[s].random(k) < self.eps[s]
+            random_a = self.rngs[s].integers(self.n_actions, size=k)
+            acts[s] = np.where(explore, random_a, greedy[s])
+        return acts
+
+    def train_round(self, s: np.ndarray, a: np.ndarray, r: np.ndarray,
+                    s2: np.ndarray, done: np.ndarray | None = None) -> None:
+        """Record + learn a whole round of transitions: (N, k, F) states,
+        (N, k) actions/rewards.  Replay inserts and minibatch draws run
+        host-side per search (identical ``Replay`` semantics and RNG stream
+        to the reference per-transition loop); every search's sequential
+        train steps then run as ONE jitted vmapped scan.  Rounds where no
+        replay is warm enough dispatch nothing at all."""
+        N, k = a.shape
+        if done is None:
+            done = np.zeros((N, k), np.float32)
+        batches: list[list[tuple]] = [[] for _ in range(N)]
+        for si in range(N):
+            rep, rng = self.replays[si], self.rngs[si]
+            for j in range(k):
+                rep.add(np.asarray(s[si, j], np.float32), a[si, j], r[si, j],
+                        np.asarray(s2[si, j], np.float32), done[si, j])
+                if rep.n >= self.batch:
+                    batches[si].append(rep.sample(rng, self.batch))
+                    self.eps[si] = max(self.eps_min,
+                                       self.eps[si] * self.eps_decay)
+        if all(len(b) == 0 for b in batches):
+            return
+        # pad the step axis to k (the per-round maximum) so one scan shape
+        # serves the warm-up round and steady state alike — one compile per
+        # engine configuration instead of one per replay fill level
+        m_steps = k
+        F = s.shape[-1]
+        pad = (np.zeros((self.batch, F), np.float32),
+               np.zeros(self.batch, np.int32),
+               np.zeros(self.batch, np.float32),
+               np.zeros((self.batch, F), np.float32),
+               np.zeros(self.batch, np.float32))
+        stacked = [np.stack([
+            np.stack([bl[step][part] if step < len(bl) else pad[part]
+                      for step in range(m_steps)])
+            for bl in batches]) for part in range(5)]
+        dt = np.array([[step < len(bl) for step in range(m_steps)]
+                       for bl in batches])
+        (self.params, self.target_params, self.m, self.v,
+         self.t), _ = _bank_train_steps(
+            self.params, self.target_params, self.m, self.v, self.t,
+            *(jnp.asarray(x) for x in stacked), jnp.asarray(dt), self.gamma)

@@ -145,7 +145,10 @@ class SoftwareSpace:
     def n_features(self) -> int:
         return MAX_LOOPS * 3 + 4
 
-    def features(self, s: Schedule) -> np.ndarray:
+    def features(self, s: Schedule, rep=None) -> np.ndarray:
+        """Fixed-size DQN embedding of one schedule.  ``rep`` may supply the
+        schedule's CostReport (e.g. from a batched pass) so no extra
+        cost-model evaluation is needed."""
         ext = self.workload.extents
         f = np.zeros(self.n_features, dtype=np.float32)
         tile_map = s.tile_map
@@ -154,7 +157,8 @@ class SoftwareSpace:
             f[MAX_LOOPS + k] = (s.order.index(loop) / max(1, len(s.order) - 1)
                                 if loop in s.order else 0.0)
             f[2 * MAX_LOOPS + k] = math.log2(ext[loop]) / 16.0
-        rep = self.report(s)
+        if rep is None:
+            rep = self.report(s)
         f[3 * MAX_LOOPS + 0] = min(1.0, rep.vmem_bytes / self.hw.vmem_bytes) \
             if rep.vmem_bytes else 0.0
         f[3 * MAX_LOOPS + 1] = rep.utilization if rep.legal else 0.0
@@ -162,3 +166,16 @@ class SoftwareSpace:
             1, len(self.choices) - 1) if s.choice in self.choices else 0.0
         f[3 * MAX_LOOPS + 3] = 1.0 if rep.legal else 0.0
         return f
+
+    def features_batch(self, schedules: list[Schedule],
+                       reports=None) -> np.ndarray:
+        """Feature rows for a whole frontier, (n, n_features): the report-
+        derived entries come from ONE batched cost-model pass (or from
+        ``reports`` when the caller already has them), not n scalar
+        evaluations."""
+        if not schedules:
+            return np.zeros((0, self.n_features), dtype=np.float32)
+        if reports is None:
+            reports = self.report_batch(schedules)
+        return np.stack([self.features(s, rep)
+                         for s, rep in zip(schedules, reports)])

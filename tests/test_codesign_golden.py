@@ -1,0 +1,73 @@
+"""Seeded golden regression for the full codesign() flow (DESIGN.md §10).
+
+Two layers of protection for the batched-engine era:
+
+  * bit-stability — the same seeded run executed twice in one process must
+    commit the *identical* solution (schedules, hw encoding, float-exact
+    objectives).  The lock-step engine, the q-batch acquisition, and the
+    shared EvalCache are all deterministic; any nondeterminism is a bug.
+  * golden snapshot — the chosen solution (intrinsic, hw params,
+    per-workload latency) is compared against a checked-in JSON.  Structure
+    and integer hw parameters must match exactly; floats to 1e-6 relative
+    (cross-platform BLAS may differ in ulps).  Delete the file to re-bless
+    after an intentional cost-model/DSE change.
+"""
+import json
+import math
+from pathlib import Path
+
+from repro.core import workloads as W
+from repro.core.codesign import codesign
+from repro.core.cost_model import evaluate
+
+GOLDEN = Path(__file__).parent / "golden" / "codesign_table1_gemm.json"
+
+
+def _run():
+    wl = W.table1_gemm()[:3]
+    return wl, codesign(wl, intrinsics=["GEMM"], n_trials=8, n_init=4,
+                        seed=0, q=2)
+
+
+def _snapshot(wl, rep) -> dict:
+    sol = rep.solution
+    assert sol is not None
+    per_workload = {}
+    for w in wl:
+        sched = sol.schedules[w.name]
+        r = evaluate(w, sched, sol.hw)
+        per_workload[w.name] = {
+            "latency_s": r.latency_s,
+            "schedule": sched.describe(),
+        }
+    return {
+        "intrinsic": sol.intrinsic,
+        "hw": list(sol.hw.encode()),           # JSON-stable form
+        "latency_s": sol.latency_s,
+        "power_w": sol.power_w,
+        "area_um2": sol.area_um2,
+        "workloads": per_workload,
+    }
+
+
+def test_codesign_gemm_set_bit_stable_and_matches_golden():
+    wl, rep1 = _run()
+    _, rep2 = _run()
+    snap1, snap2 = _snapshot(wl, rep1), _snapshot(wl, rep2)
+    assert snap1 == snap2                      # bit-stable across runs
+
+    if not GOLDEN.exists():                    # first run blesses the golden
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(snap1, indent=2, sort_keys=True) + "\n")
+    golden = json.loads(GOLDEN.read_text())
+
+    assert snap1["intrinsic"] == golden["intrinsic"]
+    assert snap1["hw"] == golden["hw"]
+    assert set(snap1["workloads"]) == set(golden["workloads"])
+    for key in ("latency_s", "power_w", "area_um2"):
+        assert math.isclose(snap1[key], golden[key], rel_tol=1e-6), key
+    for name, got in snap1["workloads"].items():
+        want = golden["workloads"][name]
+        assert got["schedule"] == want["schedule"], name
+        assert math.isclose(got["latency_s"], want["latency_s"],
+                            rel_tol=1e-6), name

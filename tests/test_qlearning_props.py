@@ -1,0 +1,108 @@
+"""Property tests for the DQN machinery (hypothesis-gated, like
+test_pareto_mobo.py's property tier): Replay ring-buffer invariants and
+epsilon-greedy ``select_batch`` bounds."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.qlearning import DQN, Replay
+
+
+@st.composite
+def replay_runs(draw):
+    capacity = draw(st.integers(min_value=1, max_value=16))
+    n_add = draw(st.integers(min_value=1, max_value=40))
+    d = draw(st.integers(min_value=1, max_value=6))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return capacity, n_add, d, seed
+
+
+def _fill(capacity: int, n_add: int, d: int):
+    """Add n_add distinguishable transitions; returns (replay, transitions)."""
+    rep = Replay(capacity)
+    trans = []
+    for i in range(n_add):
+        s = np.full(d, float(i), np.float32)
+        s2 = np.full(d, float(-i), np.float32)
+        rep.add(s, i, 0.5 * i, s2, done=(i % 2 == 0))
+        trans.append((s, i, 0.5 * i, s2, float(i % 2 == 0)))
+    return rep, trans
+
+
+@given(replay_runs())
+@settings(max_examples=60, deadline=None)
+def test_replay_wraparound_keeps_last_capacity_items(run):
+    capacity, n_add, d, _ = run
+    rep, trans = _fill(capacity, n_add, d)
+    assert rep.n == min(n_add, capacity)
+    assert rep.ptr == n_add % capacity
+    # the ring holds exactly the most recent `capacity` transitions, each at
+    # index (insertion order) % capacity
+    for age in range(rep.n):
+        i = n_add - 1 - age                       # original insertion index
+        s, a, r, s2, done = trans[i]
+        slot = i % capacity
+        assert np.array_equal(rep.s[slot], s)
+        assert rep.a[slot] == a
+        assert rep.r[slot] == np.float32(r)
+        assert np.array_equal(rep.s2[slot], s2)
+        assert rep.done[slot] == done
+
+
+@given(replay_runs())
+@settings(max_examples=60, deadline=None)
+def test_replay_sample_only_returns_stored_transitions(run):
+    capacity, n_add, d, seed = run
+    rep, trans = _fill(capacity, n_add, d)
+    rng = np.random.default_rng(seed)
+    s, a, r, s2, done = rep.sample(rng, batch=8)
+    live = {int(rep.a[i]) for i in range(rep.n)}   # actions id transitions
+    for j in range(8):
+        assert int(a[j]) in live                  # n < capacity: only the
+        i = int(a[j])                             # filled region is sampled
+        assert np.array_equal(s[j], trans[i][0])
+        assert np.array_equal(s2[j], trans[i][3])
+        assert r[j] == np.float32(trans[i][2])
+
+
+@given(replay_runs())
+@settings(max_examples=40, deadline=None)
+def test_replay_dtype_and_shape_invariants(run):
+    capacity, n_add, d, _ = run
+    rep, _ = _fill(capacity, n_add, d)
+    assert rep.s.shape == (capacity, d) and rep.s.dtype == np.float32
+    assert rep.s2.shape == (capacity, d) and rep.s2.dtype == np.float32
+    assert rep.a.shape == (capacity,) and rep.a.dtype == np.int32
+    assert rep.r.shape == (capacity,) and rep.r.dtype == np.float32
+    assert rep.done.shape == (capacity,) and rep.done.dtype == np.float32
+    assert 0 <= rep.ptr < capacity and 0 < rep.n <= capacity
+
+
+@given(st.integers(min_value=1, max_value=12),      # batch size
+       st.integers(min_value=2, max_value=9),       # n_actions
+       st.floats(min_value=0.0, max_value=1.0),     # epsilon
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_select_batch_explore_respects_action_bounds(b, n_actions, eps, seed):
+    dqn = DQN(n_features=5, n_actions=n_actions, hidden=8, seed=seed)
+    dqn.eps = eps
+    feats = np.random.default_rng(seed).random((b, 5)).astype(np.float32)
+    acts = dqn.select_batch(feats)
+    assert acts.shape == (b,)
+    assert np.all((acts >= 0) & (acts < n_actions))
+
+
+@given(st.integers(min_value=1, max_value=12),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_select_batch_greedy_when_no_exploration(b, seed):
+    """eps=0: the explore mask is all-False, so every action is the argmax
+    of that state's Q-row (one forward for the whole batch)."""
+    dqn = DQN(n_features=5, n_actions=7, hidden=8, seed=seed)
+    dqn.eps = 0.0
+    feats = np.random.default_rng(seed).random((b, 5)).astype(np.float32)
+    acts = dqn.select_batch(feats)
+    assert np.array_equal(acts, np.argmax(dqn.q_values_batch(feats), axis=1))

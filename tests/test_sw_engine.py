@@ -1,0 +1,135 @@
+"""Lock-step batched software-DSE engine (DESIGN.md §10).
+
+Parity tier: the batched engine must reproduce ``engine="reference"``
+(sequential per-search :func:`optimize`) bit-for-bit — same best schedules,
+same latencies, same best-so-far curves — because every search keeps its own
+RNG streams and DQN slot.  Runs across gemm/conv2d/mttkrp workloads on
+heterogeneous accelerators, with and without Q-learning/EvalCache, at both
+budget tiers (the full tier exercises the vmapped train scan: replay warms
+past the minibatch size, so network weights actually evolve).
+"""
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.cost_model import EvalCache
+from repro.core.hw_primitives import HWBuilder
+from repro.core.intrinsics import ALL_INTRINSICS
+from repro.core.matching import match
+from repro.core.qlearning import DQN, DQNBank
+from repro.core.sw_dse import (BUDGETS, SearchSpec, optimize, run_searches)
+
+
+def _mixed_specs(seed: int) -> list[SearchSpec]:
+    """gemm + conv2d on a GEMM array, mttkrp on a GEMV engine: one batch of
+    heterogeneous (workload, intrinsic, hw) searches."""
+    wl_g = W.gemm(256, 256, 128, name="g")
+    wl_c = W.conv2d(32, 16, 14, 14, name="c")
+    wl_m = W.mttkrp(64, 32, 64, 32, name="m")
+    hw_g = (HWBuilder("GEMM").reshapeArray([16, 16], depth=16)
+            .addCache(256).partitionBanks(2).build())
+    hw_v = (HWBuilder("GEMV").reshapeArray([32], depth=64)
+            .addCache(128).partitionBanks(2).build())
+    return [
+        SearchSpec(wl_g, match(ALL_INTRINSICS["GEMM"], wl_g), hw_g, seed),
+        SearchSpec(wl_c, match(ALL_INTRINSICS["GEMM"], wl_c), hw_g,
+                   seed + 17),
+        SearchSpec(wl_m, match(ALL_INTRINSICS["GEMV"], wl_m), hw_v,
+                   seed + 34),
+    ]
+
+
+def _assert_identical(ref, bat):
+    assert len(ref) == len(bat)
+    for r, b in zip(ref, bat):
+        assert r.schedule == b.schedule
+        assert r.latency_s == b.latency_s          # bit-exact, not approx
+        assert r.evaluations == b.evaluations
+        assert r.history == b.history
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_batched_matches_reference_small_budget(seed):
+    specs = _mixed_specs(seed)
+    ref = run_searches(specs, engine="reference", **BUDGETS["small"])
+    bat = run_searches(specs, engine="batched", **BUDGETS["small"])
+    _assert_identical(ref, bat)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_batched_matches_reference_full_budget_with_training(seed):
+    """72 transitions per search: the replay crosses the 32-sample minibatch
+    threshold, so the per-search DQNs train — the vmapped scan must evolve
+    each slot's weights exactly as the reference per-transition loop."""
+    specs = _mixed_specs(seed)
+    ref = run_searches(specs, engine="reference", **BUDGETS["full"])
+    bat = run_searches(specs, engine="batched", **BUDGETS["full"])
+    _assert_identical(ref, bat)
+
+
+def test_batched_matches_reference_without_qlearning():
+    specs = _mixed_specs(1)
+    ref = run_searches(specs, engine="reference", use_qlearning=False,
+                       **BUDGETS["small"])
+    bat = run_searches(specs, engine="batched", use_qlearning=False,
+                       **BUDGETS["small"])
+    _assert_identical(ref, bat)
+
+
+def test_batched_matches_reference_with_shared_cache():
+    """A shared EvalCache changes who computes a report first, never its
+    value — parity must survive cross-search cache hits."""
+    specs = _mixed_specs(2) + _mixed_specs(2)   # duplicate searches: maximal
+    ref = run_searches(specs, engine="reference",   # cache cross-talk
+                       cache=EvalCache(), **BUDGETS["small"])
+    bat = run_searches(specs, engine="batched", cache=EvalCache(),
+                       **BUDGETS["small"])
+    _assert_identical(ref, bat)
+
+
+def test_single_search_equals_optimize():
+    """N=1 lock-step degenerates to exactly one optimize() call."""
+    sp = _mixed_specs(4)[0]
+    direct = optimize(sp.workload, sp.choices, sp.hw, seed=sp.seed,
+                      **BUDGETS["small"])
+    [bat] = run_searches([sp], engine="batched", **BUDGETS["small"])
+    _assert_identical([direct], [bat])
+
+
+def test_run_searches_validates_engine_and_empty():
+    assert run_searches([], engine="batched") == []
+    with pytest.raises(ValueError):
+        run_searches(_mixed_specs(0), engine="nope")
+
+
+def test_bank_slots_match_standalone_dqns():
+    """Each DQNBank slot replicates a standalone DQN(seed) bit-for-bit:
+    same init, same epsilon-greedy stream, same weights after training."""
+    seeds = [7, 11, 13]
+    n_feat, n_act, k = 6, 5, 4
+    bank = DQNBank(n_feat, n_act, seeds)
+    dqns = [DQN(n_feat, n_act, seed=s) for s in seeds]
+    rng = np.random.default_rng(0)
+    for _ in range(12):   # 48 transitions/slot: crosses the train threshold
+        feats = rng.random((len(seeds), k, n_feat)).astype(np.float32)
+        acts_b = bank.select_round(feats)
+        acts_r = np.stack([d.select_batch(f) for d, f in zip(dqns, feats)])
+        assert np.array_equal(acts_b, acts_r)
+        s2 = rng.random((len(seeds), k, n_feat)).astype(np.float32)
+        rewards = rng.uniform(-1, 1, (len(seeds), k))
+        for si, d in enumerate(dqns):
+            for j in range(k):
+                d.record(feats[si, j], int(acts_r[si, j]),
+                         float(rewards[si, j]), s2[si, j])
+                d.train_step()
+        bank.train_round(feats, acts_b, rewards, s2)
+    for si, d in enumerate(dqns):
+        assert bank.eps[si] == d.eps
+        assert int(np.asarray(bank.t)[si]) == d.t
+    stacked = bank.params
+    for li in range(len(dqns[0].params)):
+        for si, d in enumerate(dqns):
+            assert np.array_equal(np.asarray(stacked[li]["w"][si]),
+                                  np.asarray(d.params[li]["w"]))
+            assert np.array_equal(np.asarray(stacked[li]["b"][si]),
+                                  np.asarray(d.params[li]["b"]))
