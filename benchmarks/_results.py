@@ -1,0 +1,31 @@
+"""Shared writer for ``artifacts/bench_results.json``.
+
+``benchmarks.run`` rewrites the whole document after a full suite;
+individually-run gated benchmarks (bench_sw_dse, bench_serve) call
+:func:`publish` to merge just their own entry so CI can upload a perf
+snapshot without re-running everything — one schema, one merge routine.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS_PATH = (Path(__file__).resolve().parents[1] / "artifacts"
+                / "bench_results.json")
+
+
+def publish(name: str, metrics: dict, *, failed: bool) -> None:
+    """Merge one benchmark's entry into bench_results.json (same shape
+    ``benchmarks.run`` writes) without clobbering other entries."""
+    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        doc = json.loads(RESULTS_PATH.read_text())
+        assert isinstance(doc.get("results"), list)
+    except Exception:
+        doc = {"results": []}
+    doc["generated_unix"] = int(time.time())
+    doc["results"] = [r for r in doc["results"] if r.get("name") != name]
+    doc["results"].append({"name": name, "failed": failed,
+                           "metrics": metrics})
+    RESULTS_PATH.write_text(json.dumps(doc, indent=2) + "\n")

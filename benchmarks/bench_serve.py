@@ -1,0 +1,109 @@
+"""Serving-throughput benchmark: the continuous-batching engine (DESIGN.md
+§11) against the sequential one-request-at-a-time lower bound.
+
+Same engine, same compiled step functions, same requests (mixed prompt
+lengths); the only difference is ``max_concurrency=1`` for the baseline —
+so the measured speedup is pure slot-occupancy, not a compilation artifact.
+
+Gates (exit 1 on miss):
+  * >= 2x generated tokens/s at 4 slots over the sequential baseline
+  * per-request outputs identical between the two modes (batching must
+    change wall-clock, never content)
+
+Prints CSV; merges metrics into ``artifacts/bench_results.json`` so CI can
+upload the perf snapshot without running the whole ``benchmarks.run`` suite.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+SLOTS = 4
+MAX_SEQ = 48
+N_REQUESTS = 12
+MAX_NEW = 16
+TARGET_SPEEDUP = 2.0
+
+LAST_METRICS: dict = {}
+
+
+def _requests(cfg):
+    import numpy as np
+
+    from repro.launch.serve import Request
+
+    rng = np.random.default_rng(0)
+    # mixed prompt lengths over a small fixed set so both timed runs reuse
+    # the same jitted prefill shapes
+    lengths = [4, 7, 11, 5, 9, 6] * 3
+    return [Request(i, rng.integers(0, cfg.vocab, size=lengths[i])
+                    .astype(np.int32), MAX_NEW) for i in range(N_REQUESTS)]
+
+
+def _serve(cfg, params, *, max_concurrency=None):
+    from repro.launch.serve import serve_requests
+
+    t0 = time.perf_counter()
+    done, stats = serve_requests(cfg, params, _requests(cfg), slots=SLOTS,
+                                 max_seq=MAX_SEQ,
+                                 max_concurrency=max_concurrency)
+    return done, stats, time.perf_counter() - t0
+
+
+def run() -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import family_module, reduced
+
+    cfg = reduced(get_config("qwen3-8b"))
+    mod = family_module(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0), tp=1)
+
+    _serve(cfg, params)                       # warm every jit shape
+    _serve(cfg, params, max_concurrency=1)
+
+    done_b, stats_b, t_b = _serve(cfg, params)
+    done_s, stats_s, t_s = _serve(cfg, params, max_concurrency=1)
+
+    tok_s_batched = stats_b["generated"] / t_b
+    tok_s_seq = stats_s["generated"] / t_s
+    same = [r.out for r in done_b] == [r.out for r in done_s]
+    return {
+        "slots": SLOTS, "requests": N_REQUESTS, "max_new": MAX_NEW,
+        "tokens": stats_b["generated"],
+        "decode_steps_batched": stats_b["decode_steps"],
+        "decode_steps_sequential": stats_s["decode_steps"],
+        "tok_s_batched": round(tok_s_batched, 1),
+        "tok_s_sequential": round(tok_s_seq, 1),
+        "speedup": round(tok_s_batched / tok_s_seq, 2),
+        "outputs_identical": same,
+    }
+
+
+def main() -> None:
+    global LAST_METRICS
+    from benchmarks._results import publish
+
+    m = run()
+    m["pass"] = bool(m["outputs_identical"]
+                     and m["speedup"] >= TARGET_SPEEDUP)
+    LAST_METRICS = m
+    print("bench,case,tok_s_sequential,tok_s_batched,speedup,detail")
+    print(f"bench_serve,{SLOTS}slots_mixed_prompts,"
+          f"{m['tok_s_sequential']},{m['tok_s_batched']},{m['speedup']},"
+          f"identical={m['outputs_identical']}")
+    publish("bench_serve", m, failed=not m["pass"])
+    if not m["pass"]:
+        raise SystemExit(
+            f"bench_serve gate missed: speedup {m['speedup']} "
+            f"(target {TARGET_SPEEDUP}) identical={m['outputs_identical']}")
+
+
+if __name__ == "__main__":
+    main()

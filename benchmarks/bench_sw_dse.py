@@ -22,7 +22,6 @@ running the whole ``benchmarks.run`` suite.
 """
 from __future__ import annotations
 
-import json
 import sys
 import time
 from pathlib import Path
@@ -34,9 +33,6 @@ POOL = 12
 ROUNDS = 16
 K = 6
 TARGET_SPEEDUP = 5.0
-
-RESULTS_PATH = (Path(__file__).resolve().parents[1] / "artifacts"
-                / "bench_results.json")
 
 LAST_METRICS: dict = {}
 
@@ -113,24 +109,6 @@ def run_codesign_q4():
     return t_ref, t_bat, same
 
 
-def _publish(metrics: dict) -> None:
-    """Merge this benchmark's metrics into artifacts/bench_results.json
-    (same shape benchmarks.run writes) without clobbering other entries."""
-    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
-    try:
-        doc = json.loads(RESULTS_PATH.read_text())
-        assert isinstance(doc.get("results"), list)
-    except Exception:
-        doc = {"results": []}
-    doc["generated_unix"] = int(time.time())
-    doc["results"] = [r for r in doc["results"]
-                      if r.get("name") != "bench_sw_dse"]
-    doc["results"].append({"name": "bench_sw_dse",
-                           "failed": not metrics["pass"],
-                           "metrics": metrics})
-    RESULTS_PATH.write_text(json.dumps(doc, indent=2) + "\n")
-
-
 def main() -> None:
     print("bench,case,metric,reference_s,batched_s,speedup,detail")
     t_ref, t_bat, parity = run_round_loop()
@@ -161,7 +139,8 @@ def main() -> None:
         "target_speedup": TARGET_SPEEDUP,
         "pass": ok,
     }
-    _publish(LAST_METRICS)
+    from benchmarks._results import publish
+    publish("bench_sw_dse", LAST_METRICS, failed=not ok)
     if not ok:
         raise SystemExit(1)
 

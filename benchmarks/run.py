@@ -12,6 +12,8 @@
                      per-search reference (DESIGN.md §10)
   bench_calibration  analytical-vs-measured rank correlation, before/after
                      per-op calibration (DESIGN.md §8)
+  bench_serve        continuous-batching serving engine vs sequential
+                     one-request-at-a-time baseline (DESIGN.md §11)
 
 Each prints CSV; ``python -m benchmarks.run`` runs them all and writes a
 machine-readable summary — per-benchmark name, key metrics (a module's
@@ -34,14 +36,16 @@ RESULTS_PATH = Path(__file__).resolve().parents[1] / "artifacts" / "bench_result
 def main() -> None:
     from benchmarks import (ablation_qlearning, bench_acquisition,
                             bench_batched_eval, bench_calibration,
-                            bench_sw_dse, fig7_intrinsics, fig10_hw_dse,
-                            fig11_sw_dse, kernel_micro, table3_codesign)
+                            bench_serve, bench_sw_dse, fig7_intrinsics,
+                            fig10_hw_dse, fig11_sw_dse, kernel_micro,
+                            table3_codesign)
 
     failures = []
     results = []
     try:
         for mod in (kernel_micro, bench_batched_eval, bench_acquisition,
-                    bench_sw_dse, bench_calibration, fig7_intrinsics,
+                    bench_sw_dse, bench_serve, bench_calibration,
+                    fig7_intrinsics,
                     fig11_sw_dse, fig10_hw_dse, table3_codesign,
                     ablation_qlearning):
             name = mod.__name__.split(".")[-1]

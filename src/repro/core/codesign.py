@@ -370,7 +370,12 @@ def _measure_rerank(workloads, partition, res: DSEResult,
     summary = {"candidates": len(cand_idx), "measured": n_measured,
                "fallbacks": n_fallback,
                "best_measured_total_s":
-                   best_sol.latency_s if best_sol else math.inf}
+                   best_sol.latency_s if best_sol else math.inf,
+               # True when the committed candidate's total mixes analytical
+               # stand-ins with wall-clock measurements: downstream consumers
+               # must not read best_measured_total_s as measured truth then
+               "best_has_fallbacks":
+                   bool(best_rank[0] > 0) if best_rank else False}
     return best_sol, best_rank, summary
 
 

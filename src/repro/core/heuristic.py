@@ -21,8 +21,16 @@ def candidate_value(latency: float, best_latency: float) -> float:
 
 
 def top_k(pool: list, latencies: list[float], k: int) -> list[int]:
-    """Indices of the k most valuable candidates."""
+    """Indices of the (up to) k most valuable *feasible* candidates.
+
+    Infeasible candidates (non-finite latency: illegal tiling, resource
+    overflow) are filtered out entirely rather than padding the tail — a
+    refine budget spent revising a known-illegal schedule is a wasted
+    evaluation — so fewer than ``k`` indices come back when feasible
+    candidates are scarce.  Callers must size downstream work by
+    ``len(result)``, not ``k``.
+    """
     best = min((l for l in latencies if math.isfinite(l)), default=math.inf)
-    scored = sorted(range(len(pool)),
-                    key=lambda i: -candidate_value(latencies[i], best))
-    return scored[:k]
+    feasible = [i for i in range(len(pool)) if math.isfinite(latencies[i])]
+    feasible.sort(key=lambda i: -candidate_value(latencies[i], best))
+    return feasible[:k]

@@ -295,35 +295,48 @@ class DQNBank:
         return np.asarray(_bank_forward(self.params,
                                         jnp.asarray(feats, jnp.float32)))
 
-    def select_round(self, feats: np.ndarray) -> np.ndarray:
+    def select_round(self, feats: np.ndarray,
+                     counts: list[int] | None = None) -> np.ndarray:
         """Epsilon-greedy actions for all N frontiers in one network pass;
         per-search exploration noise drawn from that search's own RNG in the
-        same order a standalone ``DQN.select_batch`` would (int (N, k))."""
+        same order a standalone ``DQN.select_batch`` would (int (N, k)).
+
+        ``counts`` marks how many leading rows of each search's frontier are
+        real (ragged feasible-only frontiers arrive zero-padded to k): only
+        those consume RNG draws — a search whose reference twin would have
+        called ``select_batch`` on m states must advance its stream by
+        exactly m — and the padded tail comes back zeroed."""
         q = self.q_values_round(np.asarray(feats, np.float32))
         greedy = np.argmax(q, axis=2)
         N, k = greedy.shape
-        acts = np.empty((N, k), dtype=int)
+        acts = np.zeros((N, k), dtype=int)
         for s in range(N):
-            explore = self.rngs[s].random(k) < self.eps[s]
-            random_a = self.rngs[s].integers(self.n_actions, size=k)
-            acts[s] = np.where(explore, random_a, greedy[s])
+            m = k if counts is None else counts[s]
+            if not m:
+                continue
+            explore = self.rngs[s].random(m) < self.eps[s]
+            random_a = self.rngs[s].integers(self.n_actions, size=m)
+            acts[s, :m] = np.where(explore, random_a, greedy[s, :m])
         return acts
 
     def train_round(self, s: np.ndarray, a: np.ndarray, r: np.ndarray,
-                    s2: np.ndarray, done: np.ndarray | None = None) -> None:
+                    s2: np.ndarray, done: np.ndarray | None = None,
+                    counts: list[int] | None = None) -> None:
         """Record + learn a whole round of transitions: (N, k, F) states,
         (N, k) actions/rewards.  Replay inserts and minibatch draws run
         host-side per search (identical ``Replay`` semantics and RNG stream
         to the reference per-transition loop); every search's sequential
         train steps then run as ONE jitted vmapped scan.  Rounds where no
-        replay is warm enough dispatch nothing at all."""
+        replay is warm enough dispatch nothing at all.  ``counts`` bounds
+        how many leading transitions per search are real (ragged
+        feasible-only frontiers zero-pad to k); only those are recorded."""
         N, k = a.shape
         if done is None:
             done = np.zeros((N, k), np.float32)
         batches: list[list[tuple]] = [[] for _ in range(N)]
         for si in range(N):
             rep, rng = self.replays[si], self.rngs[si]
-            for j in range(k):
+            for j in range(k if counts is None else counts[si]):
                 rep.add(np.asarray(s[si, j], np.float32), a[si, j], r[si, j],
                         np.asarray(s2[si, j], np.float32), done[si, j])
                 if rep.n >= self.batch:

@@ -91,44 +91,64 @@ def optimize(workload: TensorExpr, choices: list[TensorizeChoice],
     if use_qlearning and dqn is None:
         dqn = DQN(space.n_features, len(space.moves), seed=seed)
 
+    # fixed keep/refill split: ``top_k`` filters infeasible candidates, so
+    # the kept set may come up short — the refill count stays constant (the
+    # pool temporarily shrinks) to keep the reference and lock-step engines
+    # on identical RNG streams
+    n_keep = max(pool_size // 2, k)
+    n_refill = pool_size - n_keep
+
     for _ in range(rounds):
-        chosen = top_k(pool, lat, k)
-        # the round's whole revision frontier in three batched calls: one
-        # feature stack, one DQN forward for every candidate, one vectorized
-        # cost-model pass over every revised schedule
-        feats = space.features_batch([pool[i] for i in chosen])
-        if use_qlearning:
-            acts = dqn.select_batch(feats)
-        else:
-            acts = rng.integers(len(space.moves), size=len(chosen))
-        revised = [space.apply(pool[i], space.moves[int(a)], rng)
-                   for i, a in zip(chosen, acts)]
-        new_reports = space.report_batch(revised)
-        evals += len(revised)
-        if use_qlearning:
-            next_feats = space.features_batch(revised, reports=new_reports)
-        for j, (i, s2) in enumerate(zip(chosen, revised)):
-            l2 = float(new_reports[j].latency_s)
+        chosen = top_k(pool, lat, k)   # may be < k: only feasible candidates
+        if chosen:
+            # the round's whole revision frontier in three batched calls: one
+            # feature stack, one DQN forward for every candidate, one
+            # vectorized cost-model pass over every revised schedule
+            feats = space.features_batch([pool[i] for i in chosen])
             if use_qlearning:
-                dqn.record(feats[j], int(acts[j]),
-                           _reward(lat[i], l2), next_feats[j])
-                dqn.train_step()
-            pool.append(s2)
-            lat.append(l2)
-        # keep the pool bounded: retain the most valuable half + fresh random
-        keep = top_k(pool, lat, max(pool_size // 2, k))
+                acts = dqn.select_batch(feats)
+            else:
+                acts = rng.integers(len(space.moves), size=len(chosen))
+            revised = [space.apply(pool[i], space.moves[int(a)], rng)
+                       for i, a in zip(chosen, acts)]
+            new_reports = space.report_batch(revised)
+            evals += len(revised)
+            if use_qlearning:
+                next_feats = space.features_batch(revised,
+                                                  reports=new_reports)
+            for j, (i, s2) in enumerate(zip(chosen, revised)):
+                l2 = float(new_reports[j].latency_s)
+                if use_qlearning:
+                    dqn.record(feats[j], int(acts[j]),
+                               _reward(lat[i], l2), next_feats[j])
+                    dqn.train_step()
+                pool.append(s2)
+                lat.append(l2)
+        # keep the pool bounded: retain the most valuable feasible candidates
+        # + a fixed count of fresh randoms
+        keep = _keep_indices(pool, lat, n_keep)
         pool = [pool[i] for i in keep]
         lat = [lat[i] for i in keep]
-        refill = [space.random_schedule(rng)
-                  for _ in range(pool_size - len(pool))]
+        refill = [space.random_schedule(rng) for _ in range(n_refill)]
         if refill:
             lat += [float(l) for l in space.latency_batch(refill)]
             pool += refill
             evals += len(refill)
-        history.append(min(lat))
+        history.append(min(lat) if lat else math.inf)
 
     best_i = int(np.argmin(lat))
     return SWResult(pool[best_i], lat[best_i], evals, history)
+
+
+def _keep_indices(pool: list, lat: list[float], n_keep: int) -> list[int]:
+    """Pool-bounding survivors: the most valuable feasible candidates; if
+    the whole pool is infeasible, the newest ``n_keep`` survive instead so
+    the search stays bounded without stalling on an empty pool.  Shared by
+    both engines — part of the same-seed parity contract."""
+    keep = top_k(pool, lat, n_keep)
+    if not keep:
+        keep = list(range(max(0, len(pool) - n_keep), len(pool)))
+    return keep
 
 
 def _reward(prev: float, new: float) -> float:
@@ -245,18 +265,30 @@ def _run_batched(specs: list[SearchSpec], *, target: str, pool_size: int,
     n_refill = pool_size - n_keep
 
     for _ in range(rounds):
+        # frontiers are feasible-only (top_k filters non-finite latencies),
+        # so they may be ragged: search si revises m_si <= k candidates.
+        # The stacked arrays stay (N, k, ...) — zero-padded rows feed the
+        # network forward (no RNG) and are masked out of replay/training —
+        # while every per-search RNG draw is sized m_si, exactly matching
+        # the reference engine's stream.
         chosen = [top_k(pools[si], lats[si], k) for si in range(N)]
-        feats = np.stack([
-            np.stack([feat_of(si, pools[si][i]) for i in chosen[si]])
-            for si in range(N)])                              # (N, k, F)
+        counts = [len(c) for c in chosen]
+        feats = np.zeros((N, k, n_feat), np.float32)
+        for si in range(N):
+            for j, i in enumerate(chosen[si]):
+                feats[si, j] = feat_of(si, pools[si][i])
         if use_qlearning:
-            acts = bank.select_round(feats)                   # one forward
+            acts = bank.select_round(feats, counts=counts)    # one forward
         else:
-            acts = np.stack([rngs[si].integers(n_moves, size=k)
-                             for si in range(N)])
+            acts = np.zeros((N, k), int)
+            for si in range(N):
+                if counts[si]:
+                    acts[si, :counts[si]] = rngs[si].integers(
+                        n_moves, size=counts[si])
         revised = [[spaces[si].apply(pools[si][i], spaces[si].moves[int(a)],
                                      rngs[si])
-                    for i, a in zip(chosen[si], acts[si])] for si in range(N)]
+                    for i, a in zip(chosen[si], acts[si][:counts[si]])]
+                   for si in range(N)]
         refills = [[spaces[si].random_schedule(rngs[si])
                     for _ in range(n_refill)] for si in range(N)]
         # the round's entire evaluation demand — every search's frontier and
@@ -264,32 +296,32 @@ def _run_batched(specs: list[SearchSpec], *, target: str, pool_size: int,
         union = _union_reports(spaces,
                                [revised[si] + refills[si] for si in range(N)],
                                target, cache)
-        new_lats = [remember(si, revised[si], union[si][:k])
+        new_lats = [remember(si, revised[si], union[si][:counts[si]])
                     for si in range(N)]
-        refill_lats = [remember(si, refills[si], union[si][k:])
+        refill_lats = [remember(si, refills[si], union[si][counts[si]:])
                        for si in range(N)]
 
         if use_qlearning:
-            next_feats = np.stack([
-                np.stack([feat_of(si, s2) for s2 in revised[si]])
-                for si in range(N)])
-            rewards = np.array([
-                [_reward(lats[si][i], new_lats[si][j])
-                 for j, i in enumerate(chosen[si])]
-                for si in range(N)])
-            bank.train_round(feats, acts, rewards, next_feats)  # one scan
+            next_feats = np.zeros((N, k, n_feat), np.float32)
+            rewards = np.zeros((N, k))
+            for si in range(N):
+                for j, i in enumerate(chosen[si]):
+                    next_feats[si, j] = feat_of(si, revised[si][j])
+                    rewards[si, j] = _reward(lats[si][i], new_lats[si][j])
+            bank.train_round(feats, acts, rewards, next_feats,
+                             counts=counts)                   # one scan
 
         for si in range(N):
             pools[si] += revised[si]
             lats[si] += new_lats[si]
-            evals[si] += k
-            keep = top_k(pools[si], lats[si], n_keep)
+            evals[si] += counts[si]
+            keep = _keep_indices(pools[si], lats[si], n_keep)
             pools[si] = [pools[si][i] for i in keep]
             lats[si] = [lats[si][i] for i in keep]
             pools[si] += refills[si]
             lats[si] += refill_lats[si]
             evals[si] += n_refill
-            history[si].append(min(lats[si]))
+            history[si].append(min(lats[si]) if lats[si] else math.inf)
 
     out = []
     for si in range(N):

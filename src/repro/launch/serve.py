@@ -1,9 +1,17 @@
-"""Batched serving driver (deliverable (b): the serve-kind example).
+"""Continuous-batching serving engine (deliverable (b); DESIGN.md §11).
 
-A minimal continuous-batching server: requests arrive with prompts of
-different lengths, a scheduler packs them into a fixed-slot decode batch,
-prefill fills each slot's KV cache, and the decode loop emits one token per
-slot per step, retiring finished requests and admitting queued ones.
+Requests arrive with prompts of different lengths; an FCFS scheduler packs
+them into a fixed number of decode *slots*.  Admission runs one batched
+prefill over the whole prompt — a single causal forward whose K/V (or
+recurrent state) is scattered into that slot alone — and every decode step
+advances all active slots at once, each at its own absolute position.
+
+Invariant (the per-slot position contract): slot ``s`` holds a request whose
+next token will be written at ``pos[s]``; its cache rows ``< pos[s]`` (or
+its recurrent state) describe exactly its own prompt + generated prefix and
+nothing else.  Admission re-establishes the invariant by *replacing* the
+whole slot slice (prefill scatter == KV/state reset), so a retired tenant's
+leftovers can never leak into the next request.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 6 --max-new 8
@@ -11,7 +19,9 @@ slot per step, retiring finished requests and admitting queued ones.
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
+import functools
 import time
 
 import jax
@@ -20,16 +30,236 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_decode_step
+from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import family_module, reduced
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.  ``next_token`` is a real field (not a
+    dynamically attached attribute): −1 until prefill seeds it, then always
+    the token the next decode step consumes."""
+
     rid: int
     prompt: np.ndarray
     max_new: int
-    out: list = dataclasses.field(default_factory=list)
+    max_seq: int | None = None     # per-request context budget (rows of KV)
+    next_token: int = -1
+    out: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError(
+                f"request {self.rid}: prompt must be a non-empty 1-D token "
+                f"array (zero-length prompts have no logits to seed decode)")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+
+
+class FCFSScheduler:
+    """First-come-first-served slot scheduler — pure bookkeeping, no model.
+
+    Owns the waiting queue and the slot occupancy table.  The engine asks
+    :meth:`admit` which requests enter which slots (lowest free slot first,
+    queue order preserved) and calls :meth:`retire` when a request finishes;
+    ``max_concurrency`` caps simultaneously active requests (1 == the
+    sequential one-request-at-a-time baseline).
+    """
+
+    def __init__(self, n_slots: int, max_concurrency: int | None = None):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.max_concurrency = min(max_concurrency or n_slots, n_slots)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Request | None] = [None] * n_slots
+
+    @property
+    def active(self) -> dict[int, Request]:
+        return {s: r for s, r in enumerate(self.slots) if r is not None}
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Assign queued requests to free slots, FCFS, up to the
+        concurrency cap.  Returns the new (slot, request) pairs."""
+        placed = []
+        for slot in range(self.n_slots):
+            if not self.queue or self.n_active >= self.max_concurrency:
+                break
+            if self.slots[slot] is None:
+                req = self.queue.popleft()
+                self.slots[slot] = req
+                placed.append((slot, req))
+        return placed
+
+    def retire(self, slot: int) -> Request:
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not occupied")
+        self.slots[slot] = None
+        return req
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(cfg, tp: int, impl: str, max_seq: int):
+    """One set of jitted step functions per (config, tp, impl, max_seq) —
+    shared by every engine instance (a fresh ``jax.jit`` wrapper per engine
+    would carry a fresh compilation cache, recompiling identical programs)."""
+    mod = family_module(cfg)
+    decode = jax.jit(make_decode_step(cfg, tp=tp, impl=impl))
+    prefill = jax.jit(
+        make_prefill_step(cfg, tp=tp, impl=impl, cache_len=max_seq))
+    axes = mod.cache_slot_axes(cfg)
+
+    def write_slot(cache, slot_cache, slot):
+        return jax.tree_util.tree_map(
+            lambda c, pc, ax: jax.lax.dynamic_update_index_in_dim(
+                c, jax.lax.index_in_dim(pc, 0, ax, keepdims=False),
+                slot, ax),
+            cache, slot_cache, axes)
+
+    return decode, prefill, jax.jit(write_slot)
+
+
+class ServeEngine:
+    """Per-slot continuous batching around one model + one shared cache.
+
+    Lifecycle per request: ``submit`` → (scheduler) → admission prefill
+    (one forward over the prompt; the packed slot cache *replaces* the slot
+    slice, resetting any stale KV/state; ``pos[slot]`` := prompt length;
+    the prompt's last logits seed ``out[0]``) → batched decode steps (each
+    active slot consumes its ``next_token`` at its own ``pos``, emits one
+    token, ``pos[slot] += 1``) → retirement when ``len(out) == max_new`` or
+    the per-request context budget is exhausted.
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 64,
+                 tp: int = 1, impl: str = "xla",
+                 max_concurrency: int | None = None):
+        if cfg.embed_inputs:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
+                             f"(DESIGN.md §5)")
+        self.cfg, self.params = cfg, params
+        self.mod = family_module(cfg)
+        self.n_slots, self.max_seq = slots, max_seq
+        self.scheduler = FCFSScheduler(slots, max_concurrency)
+        self._decode, self._prefill, self._write_slot = _jitted_steps(
+            cfg, tp, impl, max_seq)
+        self.cache = self.mod.init_cache(cfg, slots, max_seq, tp)
+        self.pos = np.zeros(slots, np.int64)   # per-slot next write position
+        self.decode_steps = 0
+        self.prefill_tokens = 0
+        self.generated = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def _budget(self, req: Request) -> int:
+        return min(self.max_seq, req.max_seq or self.max_seq)
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self._budget(req):
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)} tokens) must "
+                f"leave room under its context budget {self._budget(req)}")
+        self.scheduler.submit(req)
+
+    # -- the serving loop --------------------------------------------------
+
+    def _admit(self) -> list[Request]:
+        """Prefill newly admitted requests into their slots; returns any
+        that finish immediately (max_new == 1).
+
+        Known scaling limit: the prefill jit is shape-keyed on the prompt
+        length, so each distinct length compiles once per process.  Fine at
+        smoke scale; arbitrary production traffic wants length bucketing,
+        which needs per-family masking of the pad tail (right-padding feeds
+        junk into recurrent state and can wrap ring rows) — not done here.
+        """
+        finished = []
+        for slot, req in self.scheduler.admit():
+            prompt = jnp.asarray(req.prompt[None, :])
+            logits, slot_cache = self._prefill(self.params, prompt)
+            self.cache = self._write_slot(self.cache, slot_cache,
+                                          jnp.int32(slot))
+            self.pos[slot] = len(req.prompt)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.next_token = tok
+            req.out.append(tok)
+            self.prefill_tokens += len(req.prompt)
+            self.generated += 1
+            if len(req.out) >= req.max_new:
+                finished.append(self.scheduler.retire(slot))
+        return finished
+
+    def step(self) -> list[Request]:
+        """Admit what fits, then run one batched decode step over every
+        active slot.  Returns the requests that finished this step."""
+        finished = self._admit()
+        active = self.scheduler.active
+        if not active:
+            return finished
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for slot, req in active.items():
+            toks[slot, 0] = req.next_token
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos, jnp.int32))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for slot, req in active.items():
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            req.next_token = tok
+            self.pos[slot] += 1
+            self.generated += 1
+            if len(req.out) >= req.max_new \
+                    or self.pos[slot] >= self._budget(req):
+                finished.append(self.scheduler.retire(slot))
+        return finished
+
+    def run(self) -> list[Request]:
+        """Serve until queue and slots drain; requests in rid order."""
+        done: list[Request] = []
+        while self.scheduler.has_work():
+            done.extend(self.step())
+        return sorted(done, key=lambda r: r.rid)
+
+
+def serve_requests(cfg, params, requests, *, slots: int = 4,
+                   max_seq: int = 64, tp: int = 1, impl: str = "xla",
+                   max_concurrency: int | None = None
+                   ) -> tuple[list[Request], dict]:
+    """Convenience wrapper: submit ``requests``, drain the engine, return
+    ``(finished_requests, stats)``.  ``max_concurrency=1`` is the sequential
+    one-request-at-a-time baseline (identical math and shapes, no batching
+    across requests)."""
+    eng = ServeEngine(cfg, params, slots=slots, max_seq=max_seq, tp=tp,
+                      impl=impl, max_concurrency=max_concurrency)
+    for req in requests:
+        eng.submit(req)
+    done = eng.run()
+    return done, {"decode_steps": eng.decode_steps,
+                  "prefill_tokens": eng.prefill_tokens,
+                  "generated": eng.generated}
+
+
+def make_requests(cfg, n: int, max_new: int, seed: int = 0,
+                  lengths: tuple[int, int] = (3, 12)) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(*lengths)))
+                    .astype(np.int32), max_new)
+            for i in range(n)]
 
 
 def main() -> None:
@@ -41,6 +271,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sequential", action="store_true",
+                    help="one-request-at-a-time baseline (max_concurrency=1)")
     ap.add_argument("--tuning-db", default=None,
                     help="tuning database (tuner/db.py); defaults to "
                          "artifacts/tuning_db.json")
@@ -62,62 +294,21 @@ def main() -> None:
     if cfg.embed_inputs:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode loop "
                          f"(DESIGN.md §5) — use launch.train instead")
-    mesh = make_host_mesh()
-    tp = 1
+    make_host_mesh()
     mod = family_module(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = mod.init(cfg, key, tp=tp)
-    decode = jax.jit(make_decode_step(cfg, tp=tp))
-
-    rng = np.random.default_rng(args.seed)
-    queue = [Request(i, rng.integers(0, cfg.vocab,
-                                     size=rng.integers(3, 12)).astype(np.int32),
-                     args.max_new) for i in range(args.requests)]
-    active: dict[int, Request] = {}
-    cache = mod.init_cache(cfg, args.slots, args.max_seq, tp)
-    pos = 0
-    done = []
+    params = mod.init(cfg, jax.random.PRNGKey(args.seed), tp=1)
+    requests = make_requests(cfg, args.requests, args.max_new, args.seed)
 
     t0 = time.time()
-    steps = 0
-    while queue or active:
-        # admit requests into free slots: prefill by stepping prompt tokens
-        while queue and len(active) < args.slots:
-            req = queue.pop(0)
-            slot = next(s for s in range(args.slots) if s not in active)
-            active[slot] = req
-            # slot-wise prefill via the decode path (teacher-forced steps)
-            for t, tok in enumerate(req.prompt):
-                toks = np.zeros((args.slots, 1), np.int32)
-                toks[slot, 0] = tok
-                logits, cache = decode(params, cache, jnp.asarray(toks),
-                                       jnp.int32(pos + t))
-                steps += 1
-            req._next = int(jnp.argmax(logits[slot, -1]))
-        pos += max((len(r.prompt) for r in active.values()), default=0)
-
-        # one batched decode step for every active slot
-        toks = np.zeros((args.slots, 1), np.int32)
-        for slot, req in active.items():
-            toks[slot, 0] = getattr(req, "_next", 0)
-        logits, cache = decode(params, cache, jnp.asarray(toks),
-                               jnp.int32(min(pos, args.max_seq - 1)))
-        steps += 1
-        pos += 1
-        for slot in list(active):
-            req = active[slot]
-            tok = int(jnp.argmax(logits[slot, -1]))
-            req.out.append(tok)
-            req._next = tok
-            if len(req.out) >= req.max_new or pos >= args.max_seq - 1:
-                done.append(req)
-                del active[slot]
-
+    done, stats = serve_requests(
+        cfg, params, requests, slots=args.slots, max_seq=args.max_seq,
+        max_concurrency=1 if args.sequential else None)
     dt = time.time() - t0
-    for req in sorted(done, key=lambda r: r.rid):
+    for req in done:
         print(f"req {req.rid}: prompt[{len(req.prompt)}] -> {req.out}")
-    print(f"{len(done)} requests, {steps} decode steps, "
-          f"{steps / dt:.1f} steps/s")
+    print(f"{len(done)} requests, {stats['generated']} tokens in "
+          f"{stats['decode_steps']} decode steps, "
+          f"{stats['generated'] / dt:.1f} tok/s")
 
 
 if __name__ == "__main__":

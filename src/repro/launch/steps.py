@@ -55,19 +55,45 @@ def make_train_step(cfg: ModelConfig, optimizer: AdamW, *, tp: int,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, *, tp: int, impl: str = "xla"):
+def make_prefill_step(cfg: ModelConfig, *, tp: int, impl: str = "xla",
+                      cache_len: int | None = None):
+    """Prefill step builder.
+
+    Without ``cache_len`` (training / dry-run use): a plain full-sequence
+    forward returning logits.
+
+    With ``cache_len`` (serving use, DESIGN.md §11): one causal forward over
+    ``tokens (1, S)`` through the decode path against a fresh batch-1 cache,
+    returning ``(logits, slot_cache)`` where ``slot_cache`` is packed into
+    the serving layout (length ``cache_len``, ring folds applied).  The last
+    position's logits are exact; the cache equals what S sequential decode
+    steps would have produced — without ever touching a neighbor slot.
+    """
     mod = family_module(cfg)
 
-    def prefill_step(params, batch):
-        return mod.forward(params, cfg, batch, tp=tp, impl=impl)
+    if cache_len is None:
+        def prefill_step(params, batch):
+            return mod.forward(params, cfg, batch, tp=tp, impl=impl)
 
-    return prefill_step
+        return prefill_step
+
+    def slot_prefill_step(params, tokens):
+        s = tokens.shape[1]
+        pcache = mod.init_prefill_cache(cfg, tokens.shape[0], s, tp)
+        logits, pcache = mod.decode_step(
+            params, cfg, pcache, tokens,
+            jnp.zeros((tokens.shape[0],), jnp.int32), tp=tp, impl=impl)
+        return logits, mod.pack_slot_cache(cfg, pcache, cache_len, s)
+
+    return slot_prefill_step
 
 
 def make_decode_step(cfg: ModelConfig, *, tp: int, impl: str = "xla"):
     mod = family_module(cfg)
 
     def decode_step(params, cache, tokens, pos):
+        """tokens (B, S); pos (B,) per-slot absolute positions (scalar
+        broadcasts)."""
         return mod.decode_step(params, cfg, cache, tokens, pos,
                                tp=tp, impl=impl)
 

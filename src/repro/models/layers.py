@@ -162,13 +162,28 @@ def attention(params: Params, cfg: ModelConfig, x: jax.Array, *,
         # decode: insert current k/v, attend over the prefix.  Sliding-window
         # layers may carry a ring buffer of `window` slots (slot = pos % W);
         # absolute slot positions reconstruct the mask (§Perf, gemma2 decode).
+        # ``cache_pos`` is per-slot — a (B,) vector of absolute write
+        # positions (a scalar broadcasts) — so co-scheduled requests at
+        # different depths each write and mask at their own position
+        # (DESIGN.md §11).
         cache_len = cache["k"].shape[1]
         ring = window > 0 and cache_len == window
-        ins = jax.lax.rem(cache_pos, jnp.int32(window)) if ring else cache_pos
+        bsz, sq = q.shape[0], q.shape[1]
+        cpos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (bsz,))
+        b_idx = jnp.arange(bsz)[:, None]
 
         def put(name, val):
-            return jax.lax.dynamic_update_slice_in_dim(
-                cache[name], val.astype(cache[name].dtype), ins, axis=1)
+            s = val.shape[1]
+            if ring and s >= window:
+                val = val[:, s - window:]   # a full wrap keeps only the tail
+            kept = val.shape[1]
+            rows = cpos[:, None] + (s - kept) + jnp.arange(kept)
+            if ring:
+                rows = rows % window
+            # out-of-range rows (a retired slot parked past its budget) are
+            # dropped rather than clamped onto the last row
+            return cache[name].at[b_idx, rows].set(
+                val.astype(cache[name].dtype), mode="drop")
 
         if "k_scale" in cache:   # int8 KV: per-(token, head) scales
             def quant(z):
@@ -189,11 +204,11 @@ def attention(params: Params, cfg: ModelConfig, x: jax.Array, *,
             new_cache = {"k": put("k", k), "v": put("v", v)}
             ck, cv = new_cache["k"], new_cache["v"]
 
-        last = cache_pos + q.shape[1] - 1
+        last = cpos + sq - 1                                 # (B,)
         if ring:
             slots = jnp.arange(cache_len)
-            kpos = last - jax.lax.rem(
-                (last - slots) % window + window, jnp.int32(window))
+            kpos = last[:, None] - jax.lax.rem(
+                (last[:, None] - slots) % window + window, jnp.int32(window))
             out = _decode_attention(q, ck, cv, cfg, last, 0, kpos=kpos)
         else:
             out = _decode_attention(q, ck, cv, cfg, last, window)
@@ -211,8 +226,10 @@ def _decode_attention(q, ck, cv, cfg: ModelConfig, last_pos, window: int,
                       kpos: jax.Array | None = None):
     """Single/few-token query against a (partially filled) cache.  Memory
     bound — the XLA einsum path with explicit position masking is the right
-    tool; positions beyond ``last_pos`` are masked.  ``kpos`` overrides slot
-    positions (ring-buffer caches)."""
+    tool; positions beyond ``last_pos`` are masked.  ``last_pos`` is per-slot
+    ((B,) — a scalar broadcasts) so every sequence in the batch masks at its
+    own absolute depth; ``kpos`` ((B, S_kv)) overrides slot positions
+    (ring-buffer caches)."""
     b, sq, h, hd = q.shape
     skv, kvh = ck.shape[1], ck.shape[2]
     g = h // kvh
@@ -220,12 +237,14 @@ def _decode_attention(q, ck, cv, cfg: ModelConfig, last_pos, window: int,
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, ck.astype(jnp.float32))
     logits *= hd ** -0.5
     logits = softcap(logits, cfg.attn_softcap)
-    kpos = jnp.arange(skv)[None, :] if kpos is None else kpos[None, :]
-    qpos = (last_pos - (sq - 1) + jnp.arange(sq))[:, None]
-    mask = (kpos <= qpos) & (kpos >= 0)
+    last_pos = jnp.broadcast_to(jnp.asarray(last_pos, jnp.int32), (b,))
+    kpos = (jnp.broadcast_to(jnp.arange(skv), (b, skv)) if kpos is None
+            else jnp.broadcast_to(kpos, (b, skv)))[:, None, :]  # (B, 1, Skv)
+    qpos = (last_pos[:, None] - (sq - 1) + jnp.arange(sq))[..., None]
+    mask = (kpos <= qpos) & (kpos >= 0)                   # (B, Sq, Skv)
     if window > 0:
         mask &= kpos > qpos - window
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p, cv.astype(jnp.float32))
     return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -202,10 +202,34 @@ def cache_specs(cfg: ModelConfig) -> Params:
             "shift_c": P(None, L.BATCH_AXES, None)}
 
 
+def init_prefill_cache(cfg: ModelConfig, batch: int, seq: int, tp: int = 1,
+                       dtype=None) -> Params:
+    """Batch-1 prefill state (DESIGN.md §11): the recurrence is O(1) in
+    sequence length, so the prefill cache IS the slot state."""
+    return init_cache(cfg, batch, seq, tp, dtype)
+
+
+def pack_slot_cache(cfg: ModelConfig, pcache: Params, max_seq: int,
+                    seq_len: int) -> Params:
+    """Identity: recurrent state has no sequence axis.  A fresh admission
+    scatters this state over the slot wholesale, which is exactly the
+    per-slot state *reset* this family needs instead of position zeroing."""
+    if seq_len > max_seq:
+        raise ValueError(f"prompt length {seq_len} exceeds max_seq {max_seq}")
+    return pcache
+
+
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Batch(=slot)-axis index of every cache leaf (serving scatter map)."""
+    return {"wkv": 1, "shift_t": 1, "shift_c": 1}
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
                 tp: int = 1, impl: str = "xla"):
-    """State-carried single-token step (O(1) in context length — the reason
-    long_500k runs for this family)."""
+    """State-carried step (O(1) in context length — the reason long_500k
+    runs for this family).  ``tokens`` may be (B, 1) (decode) or (B, S)
+    (slot prefill); ``pos`` is accepted for API uniformity but unused — the
+    recurrent state, not a position index, carries the history."""
     x = L.embed(params["embed"], tokens)
 
     def body(x, xs):

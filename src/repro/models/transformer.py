@@ -13,6 +13,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.context import constrain_activations
@@ -219,6 +220,75 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1,
     return {"all": one(cfg.n_layers, max_seq)}
 
 
+def init_prefill_cache(cfg: ModelConfig, batch: int, seq: int, tp: int = 1,
+                       dtype=jnp.bfloat16) -> Params:
+    """Full-length caches for a one-shot slot prefill (DESIGN.md §11).
+
+    Sliding-window layers get the whole sequence rather than their ring:
+    during a single-forward prefill every query position must see its exact
+    window, or mid-prompt activations (and through them the final token's
+    deeper layers) silently degrade.  :func:`pack_slot_cache` folds the
+    result back into the serving ring layout afterwards.
+    """
+    def one(n):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype),
+            L.init_kv_cache(cfg, batch, seq, tp, dtype))
+    if cfg.alt_local_global:
+        n = cfg.n_layers // 2
+        return {"local": one(n), "global": one(n)}
+    return {"all": one(cfg.n_layers)}
+
+
+def pack_slot_cache(cfg: ModelConfig, pcache: Params, max_seq: int,
+                    seq_len: int) -> Params:
+    """Repack a batch-1 prefill cache (:func:`init_prefill_cache`, length
+    ``seq_len``) into one slot of the serving cache layout: plain KV is
+    right-padded to ``max_seq``; sliding-window groups are folded into their
+    ring layout (slot ``p % window`` holds position ``p`` of the last
+    ``window`` positions, exactly what sequential decode would have left)."""
+    if seq_len > max_seq:
+        raise ValueError(f"prompt length {seq_len} exceeds max_seq {max_seq}")
+
+    def pad(leaf, target):
+        if leaf.shape[2] == target:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[2] = (0, target - leaf.shape[2])
+        return jnp.pad(leaf, widths)
+
+    def ring(leaf, window):
+        last = seq_len - 1
+        j = np.arange(window)
+        p = last - (last - j) % window          # absolute position per slot
+        rows = jnp.take(leaf, jnp.asarray(np.clip(p, 0, seq_len - 1)), axis=2)
+        valid = jnp.asarray(p >= 0).reshape(
+            (1, 1, window) + (1,) * (leaf.ndim - 3))
+        return jnp.where(valid, rows, jnp.zeros_like(rows))
+
+    def one(tree, target, use_ring):
+        fn = (lambda x: ring(x, target)) if use_ring else \
+            (lambda x: pad(x, target))
+        return jax.tree_util.tree_map(fn, tree)
+
+    if cfg.alt_local_global:
+        local_seq = min(max_seq, cfg.local_window or max_seq)
+        return {"local": one(pcache["local"], local_seq,
+                             local_seq == cfg.local_window),
+                "global": one(pcache["global"], max_seq, False)}
+    return {"all": one(pcache["all"], max_seq, False)}
+
+
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Batch(=slot)-axis index of every cache leaf — the scatter map the
+    serving engine uses to write one slot's prefill into the shared cache."""
+    one = jax.tree_util.tree_map(lambda _: 1, L.kv_cache_specs(cfg),
+                                 is_leaf=lambda x: isinstance(x, P))
+    if cfg.alt_local_global:
+        return {"local": one, "global": one}
+    return {"all": one}
+
+
 def cache_specs(cfg: ModelConfig) -> Params:
     base = jax.tree_util.tree_map(
         lambda s: P(None, *s), L.kv_cache_specs(cfg),
@@ -231,11 +301,15 @@ def cache_specs(cfg: ModelConfig) -> Params:
 def decode_step(params: Params, cfg: ModelConfig, cache: Params,
                 tokens: jax.Array, pos: jax.Array, *, tp: int = 1,
                 impl: str = "xla") -> tuple[jax.Array, Params]:
-    """One autoregressive step: tokens (B, 1), pos scalar int32."""
+    """One autoregressive step: tokens (B, S) at per-slot absolute positions
+    ``pos`` — (B,) int32, a scalar broadcasts.  S=1 is the serving decode
+    step; S>1 is a slot prefill (one causal forward whose K/V land in the
+    cache at ``pos .. pos+S-1``)."""
     scale = cfg.name.startswith("gemma")
     x = L.embed(params["embed"], tokens, scale=scale)
-    b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None], (b, 1))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None] + jnp.arange(s)
     x, new_cache = _run_layers(params, cfg, x, positions=positions, tp=tp,
                                impl=impl, caches=cache, cache_pos=pos)
     x = L.rms_norm(x, params["final_norm"], plus_one=cfg.sandwich_norm)

@@ -239,11 +239,45 @@ def cache_specs(cfg: ModelConfig) -> Params:
             "attn": kv}
 
 
+def init_prefill_cache(cfg: ModelConfig, batch: int, seq: int, tp: int = 1,
+                       dtype=None) -> Params:
+    """Batch-1 prefill caches (DESIGN.md §11): conv/SSD states are O(1) in
+    sequence length, only the shared-attention KV needs the prompt length."""
+    return init_cache(cfg, batch, seq, tp, dtype)
+
+
+def pack_slot_cache(cfg: ModelConfig, pcache: Params, max_seq: int,
+                    seq_len: int) -> Params:
+    """Repack a batch-1 prefill cache into one serving slot: recurrent
+    conv/SSD states carry over as-is, the attention KV pads to ``max_seq``."""
+    if seq_len > max_seq:
+        raise ValueError(f"prompt length {seq_len} exceeds max_seq {max_seq}")
+
+    def pad(leaf):
+        widths = [(0, 0)] * leaf.ndim
+        widths[2] = (0, max_seq - leaf.shape[2])
+        return jnp.pad(leaf, widths)
+
+    return {"conv": pcache["conv"], "ssd": pcache["ssd"],
+            "attn": jax.tree_util.tree_map(pad, pcache["attn"])}
+
+
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Batch(=slot)-axis index of every cache leaf (serving scatter map)."""
+    return {"conv": 2, "ssd": 2,
+            "attn": jax.tree_util.tree_map(lambda _: 1,
+                                           L.kv_cache_specs(cfg),
+                                           is_leaf=lambda x: isinstance(x, P))}
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
                 tp: int = 1, impl: str = "xla"):
+    """Decode ``tokens (B, S)`` at per-slot positions ``pos`` ((B,) int32,
+    scalar broadcasts); S>1 is a slot prefill."""
     x = L.embed(params["embed"], tokens)
-    b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None], (b, 1))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None] + jnp.arange(s)
     shared = params["shared"]
 
     def inner(x, xs):

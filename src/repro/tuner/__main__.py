@@ -115,10 +115,12 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     print(f"solution: {report.solution.describe()}")
     for intr, s in (report.measured or {}).items():
+        mixed = " [MIXED: total contains analytical stand-ins]" \
+            if s.get("best_has_fallbacks") else ""
         print(f"  {intr}: measured {s['measured']} kernel points over "
               f"{s['candidates']} candidates ({s['fallbacks']} analytical "
               f"fallbacks), best total "
-              f"{s['best_measured_total_s'] * 1e3:.3f} ms")
+              f"{s['best_measured_total_s'] * 1e3:.3f} ms{mixed}")
     if report.calibration is not None:
         for op, corr in report.calibration.corrections.items():
             print(f"  calibration[{op}]: {corr.kind} "

@@ -1,0 +1,264 @@
+"""The continuous-batching serving engine (DESIGN.md §11).
+
+Three layers:
+
+  * FCFS scheduler unit tests — pure bookkeeping, no model: admission
+    order, lowest-free-slot placement, slot reuse after retirement,
+    concurrency caps, request validation.
+  * per-request budget semantics on a live engine.
+  * the staggered-admission parity gate: per-request outputs from the
+    continuous-batched engine must be BIT-IDENTICAL to a sequential
+    single-request reference (fresh slots=1 engine per request) for every
+    admission pattern, on every decode-capable family — including a
+    gemma2-style ring-buffer-window case whose prompts overflow the window.
+    This is the invariant the old serving loop violated five different ways
+    (shared scalar pos, zero-token prefill pollution, cross-request pos
+    desync, clamped last row, stale-KV leaks).
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import FCFSScheduler, Request, ServeEngine, \
+    serve_requests
+from repro.models import family_module, reduced
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _req(rid, n=3, max_new=4, **kw):
+    return Request(rid, np.arange(1, n + 1, dtype=np.int32), max_new, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Request validation (satellite: real next_token field, no empty prompts)
+# ---------------------------------------------------------------------------
+
+def test_request_rejects_empty_prompt():
+    with pytest.raises(ValueError, match="non-empty"):
+        Request(0, np.array([], np.int32), 4)
+    with pytest.raises(ValueError, match="1-D"):
+        Request(0, np.ones((2, 2), np.int32), 4)
+    with pytest.raises(ValueError, match="max_new"):
+        _req(0, max_new=0)
+
+
+def test_request_next_token_is_a_real_field():
+    r = _req(0)
+    assert r.next_token == -1                  # not a getattr default
+    assert "next_token" in {f.name for f in
+                            __import__("dataclasses").fields(Request)}
+
+
+# ---------------------------------------------------------------------------
+# FCFS scheduler (model-free)
+# ---------------------------------------------------------------------------
+
+def test_fcfs_admission_order_and_lowest_slot_first():
+    s = FCFSScheduler(3)
+    for i in range(5):
+        s.submit(_req(i))
+    placed = s.admit()
+    assert [(slot, r.rid) for slot, r in placed] == [(0, 0), (1, 1), (2, 2)]
+    assert [r.rid for r in s.queue] == [3, 4]
+    assert s.admit() == []                     # full: nothing placed
+
+
+def test_fcfs_slot_reuse_after_retirement():
+    s = FCFSScheduler(2)
+    for i in range(4):
+        s.submit(_req(i))
+    s.admit()
+    done = s.retire(0)
+    assert done.rid == 0 and s.n_active == 1
+    placed = s.admit()                         # rid 2 lands in freed slot 0
+    assert [(slot, r.rid) for slot, r in placed] == [(0, 2)]
+    s.retire(1)
+    assert [(slot, r.rid) for slot, r in s.admit()] == [(1, 3)]
+    s.retire(1)
+    with pytest.raises(ValueError, match="not occupied"):
+        s.retire(1)
+
+
+def test_fcfs_concurrency_cap():
+    s = FCFSScheduler(4, max_concurrency=1)
+    for i in range(3):
+        s.submit(_req(i))
+    assert len(s.admit()) == 1                 # sequential baseline mode
+    assert s.admit() == []
+    s.retire(0)
+    placed = s.admit()
+    assert len(placed) == 1 and placed[0][1].rid == 1
+
+
+def test_fcfs_has_work():
+    s = FCFSScheduler(1)
+    assert not s.has_work()
+    s.submit(_req(0))
+    assert s.has_work()
+    s.admit()
+    assert s.has_work()
+    s.retire(0)
+    assert not s.has_work()
+
+
+# ---------------------------------------------------------------------------
+# live-engine lifecycle
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _family(arch, **over):
+    cfg = reduced(get_config(arch), **dict(over))
+    mod = family_module(cfg)
+    return cfg, mod.init(cfg, KEY, tp=1)
+
+
+def test_per_request_budget_retires_early():
+    """A request's own max_seq budget retires it even when max_new and the
+    engine-wide max_seq would allow more: prompt P=3, budget B=6 -> one
+    prefill token + (B-P) decode tokens."""
+    cfg, params = _family("qwen3-8b")
+    eng = ServeEngine(cfg, params, slots=2, max_seq=32)
+    eng.submit(_req(0, n=3, max_new=50, max_seq=6))
+    eng.submit(_req(1, n=3, max_new=4))
+    done = eng.run()
+    assert len(done[0].out) == 1 + (6 - 3)
+    assert len(done[1].out) == 4
+    # prompt must leave room under its budget
+    with pytest.raises(ValueError, match="room"):
+        eng.submit(_req(2, n=6, max_new=2, max_seq=6))
+
+
+def test_max_new_one_finishes_at_prefill():
+    cfg, params = _family("qwen3-8b")
+    eng = ServeEngine(cfg, params, slots=1, max_seq=16)
+    eng.submit(_req(0, max_new=1))
+    done = eng.run()
+    assert len(done[0].out) == 1 and eng.decode_steps == 0
+
+
+# ---------------------------------------------------------------------------
+# staggered-admission parity (the tentpole gate)
+# ---------------------------------------------------------------------------
+
+def _reference_outputs(cfg, params, requests, max_seq):
+    """Sequential single-request reference: each request decoded alone in a
+    fresh one-slot engine — nothing to be polluted by."""
+    out = {}
+    for r in requests:
+        eng = ServeEngine(cfg, params, slots=1, max_seq=max_seq)
+        eng.submit(Request(r.rid, r.prompt.copy(), r.max_new))
+        out[r.rid] = eng.run()[0].out
+    return out
+
+
+def _teacher_forced_outputs(cfg, params, requests, max_seq):
+    """Independent oracle sharing NOTHING with the engine's admission path:
+    no one-shot prefill, no pack_slot_cache, no slot scatter — just the
+    prompt fed one token at a time through decode_step at incremental
+    positions.  A bug in the prefill/ring-fold machinery would cancel out
+    between the engine and the single-slot reference above; it cannot
+    cancel out here."""
+    import jax.numpy as jnp
+
+    from repro.models import family_module
+
+    mod = family_module(cfg)
+    out = {}
+    for r in requests:
+        cache = mod.init_cache(cfg, 1, max_seq, 1)
+        for t, tok in enumerate(r.prompt):
+            logits, cache = mod.decode_step(
+                params, cfg, cache, jnp.asarray([[tok]], jnp.int32),
+                jnp.asarray([t], jnp.int32), tp=1, impl="xla")
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        pos = len(r.prompt)
+        while len(toks) < r.max_new and pos < max_seq:
+            logits, cache = mod.decode_step(
+                params, cfg, cache, jnp.asarray([[toks[-1]]], jnp.int32),
+                jnp.asarray([pos], jnp.int32), tp=1, impl="xla")
+            toks.append(int(jnp.argmax(logits[0, -1])))
+            pos += 1
+        out[r.rid] = toks
+    return out
+
+
+def _make_requests(cfg, n, max_new, seed):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab,
+                                    size=int(rng.integers(2, 9)))
+                    .astype(np.int32), max_new) for i in range(n)]
+
+
+# admission patterns: {step index -> how many queued requests to submit}
+PATTERN_BURST = {0: 6}                        # all up front, 6 reqs > 4 slots
+PATTERN_TRICKLE = {0: 3, 2: 2, 5: 1}          # arrivals join mid-decode
+
+FAMILY_CASES = [
+    ("qwen3-8b", (), [PATTERN_BURST, PATTERN_TRICKLE]),
+    ("rwkv6-3b", (), [PATTERN_BURST, PATTERN_TRICKLE]),
+    ("zamba2-2.7b", (), [PATTERN_TRICKLE]),
+    # ring-buffer sliding window smaller than most prompts: the repacked
+    # ring must equal what sequential decode would have left in it
+    ("gemma2-2b", (("local_window", 5), ("n_layers", 4)),
+     [PATTERN_BURST, PATTERN_TRICKLE]),
+]
+
+
+@pytest.mark.parametrize("arch,over,patterns", FAMILY_CASES,
+                         ids=[c[0] for c in FAMILY_CASES])
+def test_staggered_parity_bit_identical(arch, over, patterns):
+    cfg, params = _family(arch, **dict(over))
+    max_seq, max_new = 32, 6
+    base = _make_requests(cfg, 6, max_new, seed=1)
+    ref = _reference_outputs(cfg, params, base, max_seq)
+    for pattern in patterns:
+        eng = ServeEngine(cfg, params, slots=4, max_seq=max_seq)
+        pending = [Request(r.rid, r.prompt.copy(), r.max_new) for r in base]
+        done, step = [], 0
+        while pending or eng.scheduler.has_work():
+            for _ in range(pattern.get(step, 0)):
+                eng.submit(pending.pop(0))
+            done.extend(eng.step())
+            step += 1
+        assert sorted(r.rid for r in done) == [r.rid for r in base]
+        for r in done:
+            assert r.out == ref[r.rid], \
+                f"{arch}: request {r.rid} diverged under pattern {pattern}"
+
+
+@pytest.mark.parametrize("arch,over", [("qwen3-8b", ()),
+                                       ("gemma2-2b", (("local_window", 5),
+                                                      ("n_layers", 4)))],
+                         ids=["qwen3-8b", "gemma2-2b-ring"])
+def test_one_shot_prefill_matches_teacher_forced_decode(arch, over):
+    """The admission path (one-shot prefill + pack_slot_cache + slot
+    scatter) against an oracle that never uses it: token-by-token
+    teacher-forced decode.  Catches prefill/ring-fold bugs that would
+    cancel out between the engine and the single-slot reference."""
+    cfg, params = _family(arch, **dict(over))
+    reqs = _make_requests(cfg, 4, 5, seed=2)
+    oracle = _teacher_forced_outputs(cfg, params, reqs, max_seq=32)
+    eng = ServeEngine(cfg, params, slots=4, max_seq=32)
+    for r in reqs:
+        eng.submit(r)
+    for r in eng.run():
+        assert r.out == oracle[r.rid], f"{arch}: request {r.rid} diverged"
+
+
+def test_sequential_mode_matches_batched_outputs():
+    """max_concurrency=1 (the benchmark baseline) must produce the same
+    per-request outputs — batching changes wall-clock, never content."""
+    cfg, params = _family("qwen3-8b")
+    base = _make_requests(cfg, 5, 5, seed=3)
+    copy = lambda: [Request(r.rid, r.prompt.copy(), r.max_new) for r in base]
+    batched, stats_b = serve_requests(cfg, params, copy(), slots=4,
+                                      max_seq=32)
+    seq, stats_s = serve_requests(cfg, params, copy(), slots=4, max_seq=32,
+                                  max_concurrency=1)
+    assert [r.out for r in batched] == [r.out for r in seq]
+    assert stats_b["generated"] == stats_s["generated"]
+    assert stats_b["decode_steps"] < stats_s["decode_steps"]

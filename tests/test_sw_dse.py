@@ -37,6 +37,58 @@ def test_top_k_orders_by_value():
     assert idx == [1, 2]
 
 
+def test_top_k_filters_infeasible():
+    """Regression: when k exceeds the feasible count, infinite-latency
+    (known-illegal) candidates must NOT pad the result — the refine budget
+    would be spent revising them."""
+    lats = [math.inf, 2.0, math.inf, 1.0, math.inf]
+    idx = top_k(list("abcde"), lats, 4)
+    assert idx == [3, 1]                      # only the two feasible, ranked
+    assert top_k(list("ab"), [math.inf, math.inf], 2) == []
+    # unchanged when feasible candidates are plentiful
+    assert top_k(list("abc"), [3.0, 1.0, 2.0], 2) == [1, 2]
+
+
+def _engines_agree(wl, choices, hw, *, seeds, pool_size, rounds, k):
+    from repro.core.sw_dse import SearchSpec, run_searches
+    specs = [SearchSpec(wl, choices, hw, seed=s) for s in seeds]
+    ref = run_searches(specs, pool_size=pool_size, rounds=rounds, k=k,
+                       engine="reference")
+    bat = run_searches(specs, pool_size=pool_size, rounds=rounds, k=k,
+                       engine="batched")
+    for r, b in zip(ref, bat):
+        assert r.schedule == b.schedule
+        assert (r.latency_s == b.latency_s) or \
+            (math.isinf(r.latency_s) and math.isinf(b.latency_s))
+        assert r.history == b.history
+        assert r.evaluations == b.evaluations
+    return bat
+
+
+def test_ragged_frontier_engine_parity(setup):
+    """With small pools over a space where ~10% of random schedules are
+    illegal, some rounds revise fewer than k candidates.  The lock-step
+    engine's padded frontiers must stay bit-identical to the reference on
+    every seed (RNG streams sized by the real counts, padded transitions
+    masked out of training)."""
+    wl, hw, choices = setup
+    _engines_agree(wl, choices, hw, seeds=range(5), pool_size=6, rounds=4,
+                   k=4)
+
+
+def test_all_infeasible_space_survives_and_engines_agree(setup):
+    """A hardware point whose cache fits nothing makes every schedule
+    infeasible: frontiers are empty, the newest-n fallback bounds the pool,
+    and both engines must agree without stalling or crashing."""
+    from repro.core.hw_primitives import HWBuilder
+    wl, _, choices = setup
+    hw = (HWBuilder("GEMM").reshapeArray([16, 16], depth=16)
+          .addCache(1).partitionBanks(1).build())
+    res = _engines_agree(wl, choices, hw, seeds=[0, 1], pool_size=6,
+                         rounds=3, k=4)
+    assert all(math.isinf(r.latency_s) for r in res)
+
+
 def test_moves_preserve_legality_domain(setup):
     wl, hw, choices = setup
     space = SoftwareSpace(wl, choices, hw)

@@ -218,6 +218,13 @@ def test_codesign_measure_end_to_end(tmp_path):
     assert rep.solution is not None
     assert math.isfinite(rep.solution.latency_s)
     assert rep.measured and rep.measured["GEMM"]["measured"] > 0
+    # the mixed-total flag always rides the summary; a winner measured on
+    # every workload must report False (no analytical stand-ins inside)
+    s = rep.measured["GEMM"]
+    assert "best_has_fallbacks" in s
+    assert isinstance(s["best_has_fallbacks"], bool)
+    if s["fallbacks"] == 0:
+        assert s["best_has_fallbacks"] is False
     assert rep.calibration is not None and rep.calibration.corrections
 
     # the DB landed, with a gemm record for the workload's shape + the app
@@ -246,6 +253,25 @@ def test_codesign_measure_end_to_end(tmp_path):
         assert installed and set(installed) == set(ops.DEFAULT_BLOCKS)
     finally:
         ops.reset_dispatch()
+
+
+def test_measure_rerank_flags_mixed_totals(monkeypatch):
+    """Regression: when the winning candidate's total contains analytical
+    stand-ins (measurement failed / no lowering), the summary must say so —
+    best_measured_total_s is then NOT wall-clock truth."""
+    from repro.tuner import measure as M_
+
+    def always_fail(w, hw, sched, opts):
+        return M_.MeasureResult(latency_s=math.inf, error="forced failure")
+
+    monkeypatch.setattr(M_, "measure_one", always_fail)
+    wl = [W.gemm(64, 64, 64, name="g0")]
+    rep = codesign(wl, intrinsics=["GEMM"], n_trials=4, n_init=2, seed=0,
+                   target="tpu", measure=True, measure_top_k=2,
+                   measure_opts=M.MeasureOptions(warmup=1, repeats=1))
+    s = rep.measured["GEMM"]
+    assert s["measured"] == 0 and s["fallbacks"] > 0
+    assert s["best_has_fallbacks"] is True
 
 
 def test_codesign_without_measure_unchanged(tmp_path):
