@@ -1,14 +1,23 @@
-"""Serving-throughput benchmark: the continuous-batching engine (DESIGN.md
-§11) against the sequential one-request-at-a-time lower bound.
+"""Serving-throughput benchmark: continuous batching and paged KV against
+the sequential one-request-at-a-time lower bound (DESIGN.md §11-12).
 
-Same engine, same compiled step functions, same requests (mixed prompt
-lengths); the only difference is ``max_concurrency=1`` for the baseline —
-so the measured speedup is pure slot-occupancy, not a compilation artifact.
+Two scenarios:
+
+  * ``uniform``: 12 mixed-short requests, the slot-pinned engine at 4
+    slots vs itself at ``max_concurrency=1`` — same compiled step
+    functions both sides, so the speedup is pure slot occupancy.
+  * ``mixed``: the ROADMAP 10:1 short/long traffic mix.  The paged engine
+    gets the SAME physical KV budget as the slot-pinned engine but spends
+    it on twice the slots (short requests only hold the pages they use),
+    so queue latency — not just throughput — is the headline metric.
 
 Gates (exit 1 on miss):
-  * >= 2x generated tokens/s at 4 slots over the sequential baseline
-  * per-request outputs identical between the two modes (batching must
-    change wall-clock, never content)
+  * uniform: >= 2x generated tokens/s at 4 slots over sequential AND
+    identical per-request outputs (batching changes wall-clock, never
+    content)
+  * mixed: paged >= 2x tokens/s over sequential AND paged p95 queue
+    latency strictly below the slot-pinned engine's, with outputs
+    identical across all three engines
 
 Prints CSV; merges metrics into ``artifacts/bench_results.json`` so CI can
 upload the perf snapshot without running the whole ``benchmarks.run`` suite.
@@ -28,6 +37,16 @@ MAX_SEQ = 48
 N_REQUESTS = 12
 MAX_NEW = 16
 TARGET_SPEEDUP = 2.0
+
+# mixed 10:1 short/long scenario (ROADMAP item 1): identical physical KV
+# budget both ways — 4 slots x 48 rows pinned == 24 pages x 8 rows paged —
+# but the paged engine spends it on 8 slots
+MIX_N = 22
+MIX_MAX_NEW = 8
+MIX_SLOTS_PAGED = 8
+MIX_PAGE_SIZE = 8
+MIX_N_PAGES = SLOTS * MAX_SEQ // MIX_PAGE_SIZE
+MIX_PREFILL_CHUNK = 16
 
 LAST_METRICS: dict = {}
 
@@ -53,6 +72,65 @@ def _serve(cfg, params, *, max_concurrency=None):
                                  max_seq=MAX_SEQ,
                                  max_concurrency=max_concurrency)
     return done, stats, time.perf_counter() - t0
+
+
+def _mixed_requests(cfg):
+    from repro.launch.serve import make_requests
+
+    return make_requests(cfg, MIX_N, MIX_MAX_NEW, seed=0, long_every=11)
+
+
+def _serve_mixed(cfg, params, mode):
+    from repro.launch.serve import serve_requests
+
+    kw = dict(max_seq=MAX_SEQ)
+    if mode == "sequential":
+        kw.update(slots=SLOTS, max_concurrency=1)
+    elif mode == "pinned":
+        kw.update(slots=SLOTS)
+    else:                                     # paged: same budget, 8 slots
+        kw.update(slots=MIX_SLOTS_PAGED, paged=True,
+                  page_size=MIX_PAGE_SIZE, n_pages=MIX_N_PAGES,
+                  prefill_chunk=MIX_PREFILL_CHUNK)
+    t0 = time.perf_counter()
+    done, stats = serve_requests(cfg, params, _mixed_requests(cfg), **kw)
+    return done, stats, time.perf_counter() - t0
+
+
+def run_mixed(cfg, params) -> dict:
+    import numpy as np
+
+    for mode in ("sequential", "pinned", "paged"):  # warm every jit shape
+        _serve_mixed(cfg, params, mode)
+
+    out = {}
+    for mode in ("sequential", "pinned", "paged"):
+        done, stats, dt = _serve_mixed(cfg, params, mode)
+        done = sorted(done, key=lambda r: r.rid)
+        out[mode] = {
+            "outs": [r.out for r in done],
+            "tok_s": stats["generated"] / dt,
+            "p95_queue_s": float(np.percentile(
+                [r.queue_latency for r in done], 95)),
+            "preemptions": stats.get("preemptions", 0),
+        }
+    same = (out["paged"]["outs"] == out["pinned"]["outs"]
+            == out["sequential"]["outs"])
+    return {
+        "requests": MIX_N, "max_new": MIX_MAX_NEW,
+        "long_every": 11, "page_size": MIX_PAGE_SIZE,
+        "n_pages": MIX_N_PAGES, "slots_paged": MIX_SLOTS_PAGED,
+        "slots_pinned": SLOTS,
+        "tok_s_sequential": round(out["sequential"]["tok_s"], 1),
+        "tok_s_pinned": round(out["pinned"]["tok_s"], 1),
+        "tok_s_paged": round(out["paged"]["tok_s"], 1),
+        "speedup_paged": round(out["paged"]["tok_s"]
+                               / out["sequential"]["tok_s"], 2),
+        "p95_queue_pinned_s": round(out["pinned"]["p95_queue_s"], 4),
+        "p95_queue_paged_s": round(out["paged"]["p95_queue_s"], 4),
+        "preemptions": out["paged"]["preemptions"],
+        "outputs_identical": same,
+    }
 
 
 def run() -> dict:
@@ -88,21 +166,48 @@ def run() -> dict:
 
 def main() -> None:
     global LAST_METRICS
+    import jax
+
     from benchmarks._results import publish
+    from repro.configs import get_config
+    from repro.models import family_module, reduced
 
     m = run()
     m["pass"] = bool(m["outputs_identical"]
                      and m["speedup"] >= TARGET_SPEEDUP)
-    LAST_METRICS = m
+
+    cfg = reduced(get_config("qwen3-8b"))
+    params = family_module(cfg).init(cfg, jax.random.PRNGKey(0), tp=1)
+    mm = run_mixed(cfg, params)
+    mm["pass"] = bool(mm["outputs_identical"]
+                      and mm["speedup_paged"] >= TARGET_SPEEDUP
+                      and mm["p95_queue_paged_s"]
+                      < mm["p95_queue_pinned_s"])
+
+    LAST_METRICS = {**m, "mixed": mm}
     print("bench,case,tok_s_sequential,tok_s_batched,speedup,detail")
     print(f"bench_serve,{SLOTS}slots_mixed_prompts,"
           f"{m['tok_s_sequential']},{m['tok_s_batched']},{m['speedup']},"
           f"identical={m['outputs_identical']}")
+    print(f"bench_serve_mixed,10to1_paged_{MIX_SLOTS_PAGED}slots,"
+          f"{mm['tok_s_sequential']},{mm['tok_s_paged']},"
+          f"{mm['speedup_paged']},"
+          f"p95_paged={mm['p95_queue_paged_s']}s_vs_pinned="
+          f"{mm['p95_queue_pinned_s']}s_identical="
+          f"{mm['outputs_identical']}")
     publish("bench_serve", m, failed=not m["pass"])
+    publish("bench_serve_mixed", mm, failed=not mm["pass"])
     if not m["pass"]:
         raise SystemExit(
             f"bench_serve gate missed: speedup {m['speedup']} "
             f"(target {TARGET_SPEEDUP}) identical={m['outputs_identical']}")
+    if not mm["pass"]:
+        raise SystemExit(
+            f"bench_serve_mixed gate missed: speedup {mm['speedup_paged']} "
+            f"(target {TARGET_SPEEDUP}), p95 paged "
+            f"{mm['p95_queue_paged_s']}s vs pinned "
+            f"{mm['p95_queue_pinned_s']}s, "
+            f"identical={mm['outputs_identical']}")
 
 
 if __name__ == "__main__":

@@ -13,8 +13,16 @@ nothing else.  Admission re-establishes the invariant by *replacing* the
 whole slot slice (prefill scatter == KV/state reset), so a retired tenant's
 leftovers can never leak into the next request.
 
+The paged engine (:class:`PagedServeEngine`, DESIGN.md §12) keeps the same
+per-slot position contract but virtualizes the KV rows themselves: full-length
+attention KV lives in one physical pool of fixed-size pages, a per-slot page
+table (``row_map``) supplies the slot → row indirection, admission is gated on
+free *pages* rather than free slots, prefill is chunked and interleaved with
+decode, and low-priority requests are preempted (swapped out to host memory,
+bit-exactly) under page pressure.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-      --requests 6 --max-new 8
+      --requests 6 --max-new 8 [--paged --page-size 8 --pages 24]
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_host_mesh
+from repro.launch.paging import PageAllocator, PriorityScheduler
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import family_module, reduced
 
@@ -38,14 +47,22 @@ from repro.models import family_module, reduced
 class Request:
     """One generation request.  ``next_token`` is a real field (not a
     dynamically attached attribute): −1 until prefill seeds it, then always
-    the token the next decode step consumes."""
+    the token the next decode step consumes.  ``priority`` is a small
+    non-negative int, 0 = most urgent (paged engine only; the FCFS engine
+    ignores it)."""
 
     rid: int
     prompt: np.ndarray
     max_new: int
     max_seq: int | None = None     # per-request context budget (rows of KV)
+    priority: int = 0
     next_token: int = -1
     out: list[int] = dataclasses.field(default_factory=list)
+    submit_seq: int = -1           # stamped by the scheduler at submit
+    preemptions: int = 0
+    submit_time: float | None = None
+    first_token_time: float | None = None
+    finish_time: float | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -55,6 +72,18 @@ class Request:
                 f"array (zero-length prompts have no logits to seed decode)")
         if self.max_new < 1:
             raise ValueError(f"request {self.rid}: max_new must be >= 1")
+        if not isinstance(self.priority, (int, np.integer)) \
+                or isinstance(self.priority, bool) or self.priority < 0:
+            raise ValueError(f"request {self.rid}: priority must be a "
+                             f"non-negative int, got {self.priority!r}")
+        self.priority = int(self.priority)
+
+    @property
+    def queue_latency(self) -> float | None:
+        """Wall-clock submit → first token, None until the first token."""
+        if self.submit_time is None or self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
 
 
 class FCFSScheduler:
@@ -171,6 +200,8 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)} tokens) must "
                 f"leave room under its context budget {self._budget(req)}")
+        if req.submit_time is None:
+            req.submit_time = time.time()
         self.scheduler.submit(req)
 
     # -- the serving loop --------------------------------------------------
@@ -195,9 +226,12 @@ class ServeEngine:
             tok = int(jnp.argmax(logits[0, -1]))
             req.next_token = tok
             req.out.append(tok)
+            if req.first_token_time is None:
+                req.first_token_time = time.time()
             self.prefill_tokens += len(req.prompt)
             self.generated += 1
             if len(req.out) >= req.max_new:
+                req.finish_time = time.time()
                 finished.append(self.scheduler.retire(slot))
         return finished
 
@@ -224,6 +258,7 @@ class ServeEngine:
             self.generated += 1
             if len(req.out) >= req.max_new \
                     or self.pos[slot] >= self._budget(req):
+                req.finish_time = time.time()
                 finished.append(self.scheduler.retire(slot))
         return finished
 
@@ -235,31 +270,388 @@ class ServeEngine:
         return sorted(done, key=lambda r: r.rid)
 
 
+@functools.lru_cache(maxsize=None)
+def _paged_jitted_steps(cfg, tp: int, impl: str):
+    """Jitted paged-engine programs per (config, tp, impl), shared across
+    engine instances like :func:`_jitted_steps`.  jax.jit additionally keys
+    the decode program on the page-table width and the write program on the
+    packed prompt length."""
+    mod = family_module(cfg)
+    decode = jax.jit(make_decode_step(cfg, tp=tp, impl=impl))
+    axes = mod.paged_slot_axes(cfg)
+
+    def write_slot(cache, packed, slot, prows):
+        """Scatter one finished batch-1 prefill: pool leaves land at the
+        slot's page-table rows ``prows``, per-slot leaves replace the slot
+        slice wholesale (the KV/state reset of DESIGN.md §11)."""
+        def wr(c, pc, ax):
+            if ax == "pool":
+                rows = jax.lax.index_in_dim(pc, 0, 1, keepdims=False)
+                return c.at[:, prows].set(rows.astype(c.dtype), mode="drop")
+            return jax.lax.dynamic_update_index_in_dim(
+                c, jax.lax.index_in_dim(pc, 0, ax, keepdims=False), slot, ax)
+        return jax.tree_util.tree_map(wr, cache, packed, axes)
+
+    return decode, jax.jit(write_slot), axes
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """An in-flight chunked prefill: a private batch-1 full-length dense
+    cache advanced ``prefill_chunk`` tokens per engine step through the same
+    decode program (row_map=None -> dense path).  The cache covers the whole
+    prompt so every chunk's queries see their exact causal (and sliding-
+    window) context; KV only moves into the shared pool at commit."""
+    req: Request
+    cache: object
+    done: int = 0
+
+
+class PagedServeEngine:
+    """Paged continuous batching (DESIGN.md §12).
+
+    KV virtualization: full-length attention KV lives in one physical pool
+    of ``n_pages`` pages of ``page_size`` rows; ``row_map[slot, i]`` maps a
+    slot's logical row ``i`` to its physical pool row (−1 = unmapped).
+    Sliding-window rings and recurrent state stay per-slot (already O(1) in
+    request length).  Admission is gated on free pages, prefill is chunked
+    and interleaved with decode, and page pressure preempts the least
+    deserving active request: its pool rows and per-slot state are swapped
+    out to host memory and restored bit-exactly on resume — no recompute, so
+    preemption can never change a request's output.
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 64,
+                 page_size: int = 8, n_pages: int | None = None,
+                 prefill_chunk: int = 16, tp: int = 1, impl: str = "xla",
+                 max_concurrency: int | None = None, age_steps: int = 32):
+        if cfg.embed_inputs:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
+                             f"(DESIGN.md §5)")
+        self.cfg, self.params = cfg, params
+        self.mod = family_module(cfg)
+        self.n_slots, self.max_seq = slots, max_seq
+        self.prefill_chunk = max(1, prefill_chunk)
+        self._tp = tp
+        if n_pages is None:   # default: same KV capacity as the dense engine
+            n_pages = -(-max_seq // page_size) * slots
+        self.alloc = PageAllocator(n_pages, page_size)
+        self.scheduler = PriorityScheduler(slots, max_concurrency, age_steps)
+        self._decode, self._write_slot, self._axes = _paged_jitted_steps(
+            cfg, tp, impl)
+        self._has_pool = "pool" in jax.tree_util.tree_leaves(self._axes)
+        self.cache = self.mod.init_paged_cache(
+            cfg, slots, n_pages * page_size, max_seq, tp)
+        self.row_map = np.full((slots, max_seq), -1, np.int32)
+        # pos sentinel max_seq: an idle/prefilling slot's decode-batch lane
+        # writes out of range, which the paged scatter drops (DESIGN.md §12)
+        self.pos = np.full(slots, max_seq, np.int64)
+        self._pages: list[list[int]] = [[] for _ in range(slots)]
+        self._prefills: dict[int, _Prefill] = {}
+        self._suspended: dict[int, tuple[int, object]] = {}   # rid -> swap
+        self.decode_steps = 0
+        self.prefill_tokens = 0
+        self.generated = 0
+        self.preemptions = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def _budget(self, req: Request) -> int:
+        return min(self.max_seq, req.max_seq or self.max_seq)
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self._budget(req):
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)} tokens) must "
+                f"leave room under its context budget {self._budget(req)}")
+        if self._has_pool:
+            # a request admitted alone must always fit: its peak row count
+            # is bounded by both its budget and prompt + max_new - 1
+            peak = min(len(req.prompt) + req.max_new - 1, self._budget(req))
+            if self.alloc.pages_for(peak) > self.alloc.n_pages:
+                raise ValueError(
+                    f"request {req.rid}: needs {self.alloc.pages_for(peak)} "
+                    f"pages at peak, pool only has {self.alloc.n_pages}")
+        if req.submit_time is None:
+            req.submit_time = time.time()
+        self.scheduler.submit(req)
+
+    # -- paging ------------------------------------------------------------
+
+    def _need_pages(self, req: Request) -> int:
+        """Free pages required to (re)start ``req`` and take one decode
+        step: prompt rows + 1 fresh, suspended rows + 1 on resume."""
+        if not self._has_pool:
+            return 0
+        rows = self._suspended[req.rid][0] if req.rid in self._suspended \
+            else len(req.prompt)
+        return self.alloc.pages_for(min(rows + 1, self._budget(req)))
+
+    def _release(self, slot: int) -> None:
+        if self._pages[slot]:
+            self.alloc.free(self._pages[slot])
+        self._pages[slot] = []
+        self.row_map[slot, :] = -1
+        self.pos[slot] = self.max_seq
+
+    def _map_pages(self, slot: int, pages: list[int]) -> None:
+        """Append ``pages`` to the slot's table, mapping their rows."""
+        ps = self.alloc.page_size
+        start = len(self._pages[slot]) * ps
+        self._pages[slot].extend(pages)
+        stop = min(len(self._pages[slot]) * ps, self.max_seq)
+        self.row_map[slot, start:stop] = np.asarray(
+            self.alloc.rows(self._pages[slot], stop)[start:], np.int32)
+
+    def _reclaim(self, need: int, challenger: int) -> bool:
+        """Preempt strictly less deserving page-holding slots until ``need``
+        pages are free; False if no such victim remains."""
+        while self.alloc.n_free < need:
+            key = self.scheduler.admit_key(challenger)
+            cands = [(self.scheduler.admit_key(s), s)
+                     for s in list(self.scheduler.active)
+                     if s != challenger and self._pages[s]]
+            if not cands:
+                return False
+            vkey, victim = max(cands)
+            if vkey <= key:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _grow(self, slot: int) -> bool:
+        """Ensure the slot's next write row is mapped, allocating (and under
+        pressure reclaiming) pages; False = the slot itself was preempted."""
+        if not self._has_pool:
+            return True
+        ps = self.alloc.page_size
+        while len(self._pages[slot]) * ps < self.pos[slot] + 1:
+            if self.alloc.n_free < 1 and not self._reclaim(1, slot):
+                self._preempt(slot)
+                return False
+            self._map_pages(slot, self.alloc.alloc(1))
+        return True
+
+    # -- preemption: swap-out / swap-in (bit-exact, no recompute) ----------
+
+    def _preempt(self, slot: int) -> None:
+        req = self.scheduler.slots[slot]
+        if slot in self._prefills:
+            del self._prefills[slot]     # partial prefill restarts on resume
+        else:
+            self._swap_out(slot, req)
+        self._release(slot)
+        self.scheduler.preempt(slot)
+        self.preemptions += 1
+
+    def _swap_out(self, slot: int, req: Request) -> None:
+        rows = int(self.pos[slot])
+        prows = jnp.asarray(self.row_map[slot, :rows])
+
+        def grab(c, ax):
+            if ax == "pool":
+                return np.asarray(c[:, prows])
+            return np.asarray(
+                jax.lax.index_in_dim(c, slot, ax, keepdims=False))
+
+        self._suspended[req.rid] = (
+            rows, jax.tree_util.tree_map(grab, self.cache, self._axes))
+
+    def _swap_in(self, slot: int, req: Request) -> None:
+        rows, snap = self._suspended.pop(req.rid)
+        prows = jnp.zeros((0,), jnp.int32)
+        if self._has_pool:
+            self._map_pages(slot, self.alloc.alloc(
+                self.alloc.pages_for(rows)))
+            prows = jnp.asarray(self.row_map[slot, :rows])
+
+        def put(c, s, ax):
+            if ax == "pool":
+                return c.at[:, prows].set(jnp.asarray(s), mode="drop")
+            return jax.lax.dynamic_update_index_in_dim(
+                c, jnp.asarray(s).astype(c.dtype), slot, ax)
+
+        self.cache = jax.tree_util.tree_map(put, self.cache, snap,
+                                            self._axes)
+        self.pos[slot] = rows
+
+    # -- the serving loop --------------------------------------------------
+
+    def _start(self, slot: int, req: Request) -> None:
+        if req.rid in self._suspended:
+            self._swap_in(slot, req)
+            return
+        self.pos[slot] = self.max_seq
+        self._prefills[slot] = _Prefill(req, self.mod.init_prefill_cache(
+            self.cfg, 1, len(req.prompt), self._tp))
+
+    def _admit_new(self) -> None:
+        """Admit waiting requests in (effective priority, submit) order,
+        gated on a free slot AND enough free pages; a strictly lower
+        effective-priority active request is preempted to make room."""
+        while True:
+            req = self.scheduler.peek()
+            if req is None:
+                return
+            if self.scheduler.free_slot() is not None \
+                    and self.alloc.n_free >= self._need_pages(req):
+                self._start(self.scheduler.place(req), req)
+                continue
+            victim = self.scheduler.least_deserving()
+            if victim is None or self.scheduler.admit_key(victim)[0] <= \
+                    self.scheduler.effective_priority(req):
+                return
+            self._preempt(victim)
+
+    def _prefill_tick(self, finished: list[Request]) -> None:
+        """Advance every in-flight prefill by one chunk; commit finished
+        ones into pool pages + slot state."""
+        for slot in sorted(self._prefills):
+            pf = self._prefills[slot]
+            req = pf.req
+            chunk = min(self.prefill_chunk, len(req.prompt) - pf.done)
+            toks = jnp.asarray(req.prompt[None, pf.done:pf.done + chunk])
+            logits, pf.cache = self._decode(
+                self.params, pf.cache, toks, jnp.asarray([pf.done],
+                                                         jnp.int32))
+            pf.done += chunk
+            self.prefill_tokens += chunk
+            if pf.done < len(req.prompt):
+                continue
+            del self._prefills[slot]
+            self._commit(slot, req, pf.cache, logits, finished)
+
+    def _commit(self, slot: int, req: Request, pcache, logits,
+                finished: list[Request]) -> None:
+        """Prefill done: seed the first token, then move the prompt's KV
+        into freshly allocated pool pages + the slot's per-slot leaves."""
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.next_token = tok
+        req.out.append(tok)
+        self.generated += 1
+        if req.first_token_time is None:
+            req.first_token_time = time.time()
+        if len(req.out) >= req.max_new:
+            req.finish_time = time.time()
+            finished.append(self.scheduler.retire(slot))
+            self.pos[slot] = self.max_seq
+            return
+        n = len(req.prompt)
+        need = self.alloc.pages_for(n) if self._has_pool else 0
+        if self.alloc.n_free < need and not self._reclaim(need, slot):
+            self._preempt(slot)      # back to the queue; prefill redone
+            return
+        if need:
+            self._map_pages(slot, self.alloc.alloc(need))
+        prows = jnp.asarray(self.row_map[slot, :n].clip(min=0)
+                            if self._has_pool else np.zeros(0, np.int32))
+        packed = self.mod.pack_paged_slot(self.cfg, pcache, self.max_seq, n)
+        self.cache = self._write_slot(self.cache, packed, jnp.int32(slot),
+                                      prows)
+        self.pos[slot] = n
+
+    def _decode_tick(self, finished: list[Request]) -> None:
+        """One batched decode step over every committed slot, after mapping
+        (or reclaiming) the pages under each slot's next write row."""
+        order = sorted((s for s in self.scheduler.active
+                        if s not in self._prefills),
+                       key=self.scheduler.admit_key)
+        # _grow may preempt later slots as reclaim victims — skip them
+        decoding = [s for s in order
+                    if self.scheduler.slots[s] is not None and self._grow(s)]
+        if not decoding:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.full(self.n_slots, self.max_seq, np.int64)
+        for s in decoding:
+            toks[s, 0] = self.scheduler.slots[s].next_token
+            pos[s] = self.pos[s]
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(pos, jnp.int32), jnp.asarray(self.row_map))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in decoding:
+            req = self.scheduler.slots[s]
+            tok = int(nxt[s])
+            req.out.append(tok)
+            req.next_token = tok
+            self.pos[s] += 1
+            self.generated += 1
+            if len(req.out) >= req.max_new \
+                    or self.pos[s] >= self._budget(req):
+                req.finish_time = time.time()
+                finished.append(self.scheduler.retire(s))
+                self._release(s)
+
+    def step(self) -> list[Request]:
+        """One engine tick: admissions, one prefill chunk per prefilling
+        slot, one batched decode step.  Returns requests finished now."""
+        self.scheduler.tick()
+        finished: list[Request] = []
+        self._admit_new()
+        self._prefill_tick(finished)
+        self._decode_tick(finished)
+        return finished
+
+    def run(self) -> list[Request]:
+        done: list[Request] = []
+        while self.scheduler.has_work():
+            done.extend(self.step())
+        return sorted(done, key=lambda r: r.rid)
+
+
 def serve_requests(cfg, params, requests, *, slots: int = 4,
                    max_seq: int = 64, tp: int = 1, impl: str = "xla",
-                   max_concurrency: int | None = None
+                   max_concurrency: int | None = None, paged: bool = False,
+                   page_size: int = 8, n_pages: int | None = None,
+                   prefill_chunk: int = 16, age_steps: int = 32
                    ) -> tuple[list[Request], dict]:
     """Convenience wrapper: submit ``requests``, drain the engine, return
     ``(finished_requests, stats)``.  ``max_concurrency=1`` is the sequential
     one-request-at-a-time baseline (identical math and shapes, no batching
-    across requests)."""
-    eng = ServeEngine(cfg, params, slots=slots, max_seq=max_seq, tp=tp,
-                      impl=impl, max_concurrency=max_concurrency)
+    across requests); ``paged=True`` runs the page-table engine of
+    DESIGN.md §12 instead of the slot-pinned one."""
+    if paged:
+        eng = PagedServeEngine(
+            cfg, params, slots=slots, max_seq=max_seq, tp=tp, impl=impl,
+            max_concurrency=max_concurrency, page_size=page_size,
+            n_pages=n_pages, prefill_chunk=prefill_chunk,
+            age_steps=age_steps)
+    else:
+        eng = ServeEngine(cfg, params, slots=slots, max_seq=max_seq, tp=tp,
+                          impl=impl, max_concurrency=max_concurrency)
     for req in requests:
         eng.submit(req)
     done = eng.run()
     return done, {"decode_steps": eng.decode_steps,
                   "prefill_tokens": eng.prefill_tokens,
-                  "generated": eng.generated}
+                  "generated": eng.generated,
+                  "preemptions": getattr(eng, "preemptions", 0)}
 
 
 def make_requests(cfg, n: int, max_new: int, seed: int = 0,
-                  lengths: tuple[int, int] = (3, 12)) -> list[Request]:
+                  lengths: tuple[int, int] = (3, 12), long_every: int = 0,
+                  long_lengths: tuple[int, int] = (24, 33),
+                  priorities: tuple[int, ...] = (0,),
+                  max_new_spread: int = 0) -> list[Request]:
+    """Synthetic traffic.  The defaults reproduce the original homogeneous
+    stream bit-for-bit; the knobs generate the heterogeneous mixes paging
+    and preemption need: ``long_every=k`` makes every k-th request a long
+    prompt drawn from ``long_lengths`` (``long_every=11`` is the ROADMAP
+    10:1 short/long scenario), ``priorities`` cycles per request, and
+    ``max_new_spread=s`` draws max_new from ``[max_new-s, max_new+s]``."""
     rng = np.random.default_rng(seed)
-    return [Request(i, rng.integers(0, cfg.vocab,
-                                    size=int(rng.integers(*lengths)))
-                    .astype(np.int32), max_new)
-            for i in range(n)]
+    reqs = []
+    for i in range(n):
+        is_long = long_every and (i % long_every) == long_every - 1
+        size = int(rng.integers(*(long_lengths if is_long else lengths)))
+        mn = max_new if not max_new_spread else int(rng.integers(
+            max(1, max_new - max_new_spread), max_new + max_new_spread + 1))
+        reqs.append(Request(i, rng.integers(0, cfg.vocab, size=size)
+                            .astype(np.int32), mn,
+                            priority=priorities[i % len(priorities)]))
+    return reqs
 
 
 def main() -> None:
@@ -273,6 +665,18 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sequential", action="store_true",
                     help="one-request-at-a-time baseline (max_concurrency=1)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page-table KV engine (DESIGN.md §12)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV rows per page (paged engine)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="physical pool size in pages (default: dense-"
+                         "equivalent capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens prefetched per engine step (paged)")
+    ap.add_argument("--long-every", type=int, default=0,
+                    help="every k-th request gets a long prompt (mixed "
+                         "traffic; 0 = homogeneous)")
     ap.add_argument("--tuning-db", default=None,
                     help="tuning database (tuner/db.py); defaults to "
                          "artifacts/tuning_db.json")
@@ -297,17 +701,21 @@ def main() -> None:
     make_host_mesh()
     mod = family_module(cfg)
     params = mod.init(cfg, jax.random.PRNGKey(args.seed), tp=1)
-    requests = make_requests(cfg, args.requests, args.max_new, args.seed)
+    requests = make_requests(cfg, args.requests, args.max_new, args.seed,
+                             long_every=args.long_every)
 
     t0 = time.time()
     done, stats = serve_requests(
         cfg, params, requests, slots=args.slots, max_seq=args.max_seq,
-        max_concurrency=1 if args.sequential else None)
+        max_concurrency=1 if args.sequential else None, paged=args.paged,
+        page_size=args.page_size, n_pages=args.pages,
+        prefill_chunk=args.prefill_chunk)
     dt = time.time() - t0
     for req in done:
         print(f"req {req.rid}: prompt[{len(req.prompt)}] -> {req.out}")
     print(f"{len(done)} requests, {stats['generated']} tokens in "
-          f"{stats['decode_steps']} decode steps, "
+          f"{stats['decode_steps']} decode steps "
+          f"({stats['preemptions']} preemptions), "
           f"{stats['generated'] / dt:.1f} tok/s")
 
 

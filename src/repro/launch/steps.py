@@ -91,10 +91,11 @@ def make_prefill_step(cfg: ModelConfig, *, tp: int, impl: str = "xla",
 def make_decode_step(cfg: ModelConfig, *, tp: int, impl: str = "xla"):
     mod = family_module(cfg)
 
-    def decode_step(params, cache, tokens, pos):
+    def decode_step(params, cache, tokens, pos, row_map=None):
         """tokens (B, S); pos (B,) per-slot absolute positions (scalar
-        broadcasts)."""
+        broadcasts); ``row_map`` (B, L) page table for paged caches
+        (DESIGN.md §12), None for dense."""
         return mod.decode_step(params, cfg, cache, tokens, pos,
-                               tp=tp, impl=impl)
+                               tp=tp, impl=impl, row_map=row_map)
 
     return decode_step

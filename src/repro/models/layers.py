@@ -140,11 +140,25 @@ def _split_heads(x, n, hd):
     return x.reshape(b, s, n, hd)
 
 
+def gather_pages(pool: jax.Array, row_map: jax.Array) -> jax.Array:
+    """Page-table gather: physical pool ``(R, ...)`` -> per-slot dense view
+    ``(B, L, ...)`` where row ``i`` of slot ``b`` is ``pool[row_map[b, i]]``.
+    Unmapped rows (``-1``) read as zeros, so the view is bit-identical to
+    the dense ``(B, L, ...)`` cache layout the non-paged engine carries."""
+    safe = jnp.where(row_map >= 0, row_map, 0)
+    rows = pool[safe]
+    valid = (row_map >= 0).reshape(row_map.shape + (1,) * (pool.ndim - 1))
+    return jnp.where(valid, rows, jnp.zeros((), pool.dtype))
+
+
 def attention(params: Params, cfg: ModelConfig, x: jax.Array, *,
               positions: jax.Array, tp: int, impl: str,
               window: int = 0, cache: Params | None = None,
-              cache_pos: jax.Array | None = None):
-    """Returns (out, new_cache).  cache = {'k','v'}: (B, S_max, KV, hd)."""
+              cache_pos: jax.Array | None = None,
+              row_map: jax.Array | None = None):
+    """Returns (out, new_cache).  cache = {'k','v'}: (B, S_max, KV, hd) —
+    or, when ``row_map`` is given and the leaves are 3-D, a paged physical
+    pool (R, KV, hd) indexed through the (B, L) page table (DESIGN.md §12)."""
     pd = cfg.padded(tp)
     h, kv, hd = pd.n_heads, pd.n_kv_heads, cfg.head_dim
     rep = max(1, kv // max(1, cfg.n_kv_heads))  # kv replication factor
@@ -165,9 +179,12 @@ def attention(params: Params, cfg: ModelConfig, x: jax.Array, *,
         # ``cache_pos`` is per-slot — a (B,) vector of absolute write
         # positions (a scalar broadcasts) — so co-scheduled requests at
         # different depths each write and mask at their own position
-        # (DESIGN.md §11).
-        cache_len = cache["k"].shape[1]
-        ring = window > 0 and cache_len == window
+        # (DESIGN.md §11).  A 3-D cache leaf is a paged pool: writes and
+        # reads route through ``row_map``; ring leaves stay dense (a ring is
+        # already O(window) per slot), so one model can mix both.
+        paged = row_map is not None and cache["k"].ndim == 3
+        cache_len = row_map.shape[1] if paged else cache["k"].shape[1]
+        ring = not paged and window > 0 and cache_len == window
         bsz, sq = q.shape[0], q.shape[1]
         cpos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (bsz,))
         b_idx = jnp.arange(bsz)[:, None]
@@ -178,12 +195,31 @@ def attention(params: Params, cfg: ModelConfig, x: jax.Array, *,
                 val = val[:, s - window:]   # a full wrap keeps only the tail
             kept = val.shape[1]
             rows = cpos[:, None] + (s - kept) + jnp.arange(kept)
+            if paged:
+                # logical row -> physical pool row via the slot's page
+                # table.  Rows past the table (a parked slot) and unmapped
+                # (-1) entries redirect to index R: negative indices WRAP
+                # under mode="drop" (only >= size is out of bounds), so -1
+                # would silently stomp the last pool row
+                pool_rows = cache[name].shape[0]
+                safe = jnp.clip(rows, 0, cache_len - 1)
+                prow = jnp.take_along_axis(row_map, safe, axis=1)
+                prow = jnp.where((rows < cache_len) & (prow >= 0), prow,
+                                 pool_rows)
+                return cache[name].at[prow].set(
+                    val.astype(cache[name].dtype), mode="drop")
             if ring:
                 rows = rows % window
             # out-of-range rows (a retired slot parked past its budget) are
             # dropped rather than clamped onto the last row
             return cache[name].at[b_idx, rows].set(
                 val.astype(cache[name].dtype), mode="drop")
+
+        def full(name):
+            """Dense (B, L, ...) view of the updated cache leaf."""
+            if paged:
+                return gather_pages(new_cache[name], row_map)
+            return new_cache[name]
 
         if "k_scale" in cache:   # int8 KV: per-(token, head) scales
             def quant(z):
@@ -196,13 +232,11 @@ def attention(params: Params, cfg: ModelConfig, x: jax.Array, *,
             new_cache = {"k": put("k", kq), "v": put("v", vq),
                          "k_scale": put("k_scale", ks),
                          "v_scale": put("v_scale", vs)}
-            ck = (new_cache["k"].astype(jnp.float32)
-                  * new_cache["k_scale"][..., None])
-            cv = (new_cache["v"].astype(jnp.float32)
-                  * new_cache["v_scale"][..., None])
+            ck = full("k").astype(jnp.float32) * full("k_scale")[..., None]
+            cv = full("v").astype(jnp.float32) * full("v_scale")[..., None]
         else:
             new_cache = {"k": put("k", k), "v": put("v", v)}
-            ck, cv = new_cache["k"], new_cache["v"]
+            ck, cv = full("k"), full("v")
 
         last = cpos + sq - 1                                 # (B,)
         if ring:
@@ -259,6 +293,21 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, tp: int,
                 "v": jnp.zeros(shape, jnp.int8),
                 "k_scale": jnp.zeros(shape[:3], jnp.float32),
                 "v_scale": jnp.zeros(shape[:3], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_kv_pool(cfg: ModelConfig, rows: int, tp: int,
+                       dtype=jnp.bfloat16) -> Params:
+    """Physical KV pool of ``rows`` page-resident rows shared by every slot
+    (DESIGN.md §12).  Same leaf set as :func:`init_kv_cache` minus the slot
+    axis: the engine's page table supplies the slot -> row indirection."""
+    pd = cfg.padded(tp)
+    shape = (rows, pd.n_kv_heads, cfg.head_dim)
+    if cfg.kv_int8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:2], jnp.float32),
+                "v_scale": jnp.zeros(shape[:2], jnp.float32)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

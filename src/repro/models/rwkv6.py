@@ -224,12 +224,33 @@ def cache_slot_axes(cfg: ModelConfig) -> Params:
     return {"wkv": 1, "shift_t": 1, "shift_c": 1}
 
 
+def init_paged_cache(cfg: ModelConfig, slots: int, rows: int, max_seq: int,
+                     tp: int = 1, dtype=None) -> Params:
+    """Paged-API alias (DESIGN.md §12): recurrent state is O(1) per slot, so
+    there is nothing to page — the family joins the paged engine with zero
+    pool rows and the same per-slot state as the dense engine."""
+    return init_cache(cfg, slots, max_seq, tp, dtype)
+
+
+def paged_slot_axes(cfg: ModelConfig) -> Params:
+    """No pooled leaves: every leaf is per-slot, exactly as in
+    :func:`cache_slot_axes`."""
+    return cache_slot_axes(cfg)
+
+
+def pack_paged_slot(cfg: ModelConfig, pcache: Params, max_seq: int,
+                    seq_len: int) -> Params:
+    """Identity, same as :func:`pack_slot_cache` (no sequence axis)."""
+    return pack_slot_cache(cfg, pcache, max_seq, seq_len)
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
-                tp: int = 1, impl: str = "xla"):
+                tp: int = 1, impl: str = "xla", row_map=None):
     """State-carried step (O(1) in context length — the reason long_500k
     runs for this family).  ``tokens`` may be (B, 1) (decode) or (B, S)
     (slot prefill); ``pos`` is accepted for API uniformity but unused — the
-    recurrent state, not a position index, carries the history."""
+    recurrent state, not a position index, carries the history.
+    ``row_map`` is likewise accepted and ignored: no leaf is paged."""
     x = L.embed(params["embed"], tokens)
 
     def body(x, xs):

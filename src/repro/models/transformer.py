@@ -60,12 +60,12 @@ def _block_specs(cfg: ModelConfig) -> Params:
 
 
 def _block(p: Params, cfg: ModelConfig, x, *, positions, tp, impl, window,
-           cache=None, cache_pos=None):
+           cache=None, cache_pos=None, row_map=None):
     plus_one = cfg.sandwich_norm  # gemma-style (1+w) norms
     h = L.rms_norm(x, p["ln_attn"], plus_one=plus_one)
     attn_out, new_cache = L.attention(
         p["attn"], cfg, h, positions=positions, tp=tp, impl=impl,
-        window=window, cache=cache, cache_pos=cache_pos)
+        window=window, cache=cache, cache_pos=cache_pos, row_map=row_map)
     if cfg.sandwich_norm:
         attn_out = L.rms_norm(attn_out, p["ln_attn_post"], plus_one=True)
     x = x + attn_out
@@ -132,8 +132,9 @@ def specs(cfg: ModelConfig) -> Params:
 
 
 def _run_layers(params, cfg: ModelConfig, x, *, positions, tp, impl,
-                caches=None, cache_pos=None):
-    """Scan the block stack; returns (x, new_caches)."""
+                caches=None, cache_pos=None, row_map=None):
+    """Scan the block stack; returns (x, new_caches).  ``row_map`` is the
+    per-slot page table, shared by every paged layer (closure, not scanned)."""
     decode = caches is not None
 
     def make_body(window):
@@ -143,7 +144,7 @@ def _run_layers(params, cfg: ModelConfig, x, *, positions, tp, impl,
                 lp, cache = xs
                 x, nc = _block(lp, cfg, x, positions=positions, tp=tp,
                                impl=impl, window=window, cache=cache,
-                               cache_pos=cache_pos)
+                               cache_pos=cache_pos, row_map=row_map)
                 return x, nc
             x, _ = _block(xs, cfg, x, positions=positions, tp=tp,
                           impl=impl, window=window)
@@ -250,25 +251,9 @@ def pack_slot_cache(cfg: ModelConfig, pcache: Params, max_seq: int,
     if seq_len > max_seq:
         raise ValueError(f"prompt length {seq_len} exceeds max_seq {max_seq}")
 
-    def pad(leaf, target):
-        if leaf.shape[2] == target:
-            return leaf
-        widths = [(0, 0)] * leaf.ndim
-        widths[2] = (0, target - leaf.shape[2])
-        return jnp.pad(leaf, widths)
-
-    def ring(leaf, window):
-        last = seq_len - 1
-        j = np.arange(window)
-        p = last - (last - j) % window          # absolute position per slot
-        rows = jnp.take(leaf, jnp.asarray(np.clip(p, 0, seq_len - 1)), axis=2)
-        valid = jnp.asarray(p >= 0).reshape(
-            (1, 1, window) + (1,) * (leaf.ndim - 3))
-        return jnp.where(valid, rows, jnp.zeros_like(rows))
-
     def one(tree, target, use_ring):
-        fn = (lambda x: ring(x, target)) if use_ring else \
-            (lambda x: pad(x, target))
+        fn = (lambda x: _fold_ring(x, target, seq_len)) if use_ring else \
+            (lambda x: _pad_rows(x, target))
         return jax.tree_util.tree_map(fn, tree)
 
     if cfg.alt_local_global:
@@ -277,6 +262,24 @@ def pack_slot_cache(cfg: ModelConfig, pcache: Params, max_seq: int,
                              local_seq == cfg.local_window),
                 "global": one(pcache["global"], max_seq, False)}
     return {"all": one(pcache["all"], max_seq, False)}
+
+
+def _pad_rows(leaf, target):
+    if leaf.shape[2] == target:
+        return leaf
+    widths = [(0, 0)] * leaf.ndim
+    widths[2] = (0, target - leaf.shape[2])
+    return jnp.pad(leaf, widths)
+
+
+def _fold_ring(leaf, window, seq_len):
+    last = seq_len - 1
+    j = np.arange(window)
+    p = last - (last - j) % window              # absolute position per slot
+    rows = jnp.take(leaf, jnp.asarray(np.clip(p, 0, seq_len - 1)), axis=2)
+    valid = jnp.asarray(p >= 0).reshape(
+        (1, 1, window) + (1,) * (leaf.ndim - 3))
+    return jnp.where(valid, rows, jnp.zeros_like(rows))
 
 
 def cache_slot_axes(cfg: ModelConfig) -> Params:
@@ -298,20 +301,82 @@ def cache_specs(cfg: ModelConfig) -> Params:
     return {"all": base}
 
 
+def init_paged_cache(cfg: ModelConfig, slots: int, rows: int, max_seq: int,
+                     tp: int = 1, dtype=jnp.bfloat16) -> Params:
+    """Paged serving cache (DESIGN.md §12): full-length attention KV lives
+    in one physical pool of ``rows`` page-resident rows shared by every
+    slot, indexed through the engine's page table.  Sliding-window ring
+    layers keep their fixed per-slot ring — a ring is already O(window) per
+    slot regardless of request length, so paging it frees nothing."""
+    def pool(n):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype),
+            L.init_paged_kv_pool(cfg, rows, tp, dtype))
+
+    def dense(n, seq):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype),
+            L.init_kv_cache(cfg, slots, seq, tp, dtype))
+
+    if cfg.alt_local_global:
+        n = cfg.n_layers // 2
+        local_seq = min(max_seq, cfg.local_window or max_seq)
+        return {"local": dense(n, local_seq), "global": pool(n)}
+    return {"all": pool(cfg.n_layers)}
+
+
+def paged_slot_axes(cfg: ModelConfig) -> Params:
+    """Scatter map for the paged cache: ``"pool"`` marks leaves living in
+    the shared physical pool (written through page-table rows); ints are
+    the slot-axis index of per-slot dense leaves, as in
+    :func:`cache_slot_axes`."""
+    one = jax.tree_util.tree_map(lambda _: 1, L.kv_cache_specs(cfg),
+                                 is_leaf=lambda x: isinstance(x, P))
+    pool = jax.tree_util.tree_map(lambda _: "pool", L.kv_cache_specs(cfg),
+                                  is_leaf=lambda x: isinstance(x, P))
+    if cfg.alt_local_global:
+        return {"local": one, "global": pool}
+    return {"all": pool}
+
+
+def pack_paged_slot(cfg: ModelConfig, pcache: Params, max_seq: int,
+                    seq_len: int) -> Params:
+    """Repack a batch-1 prefill cache for the paged layout: ring leaves are
+    folded exactly as in :func:`pack_slot_cache`; pool leaves keep their raw
+    ``seq_len`` rows — the engine scatters them at page-table rows, so no
+    right-padding to ``max_seq`` ever exists (that padding is the per-slot
+    memory the paged engine reclaims)."""
+    if seq_len > max_seq:
+        raise ValueError(f"prompt length {seq_len} exceeds max_seq {max_seq}")
+    if cfg.alt_local_global:
+        local_seq = min(max_seq, cfg.local_window or max_seq)
+        if local_seq == cfg.local_window:
+            local = jax.tree_util.tree_map(
+                lambda x: _fold_ring(x, local_seq, seq_len), pcache["local"])
+        else:
+            local = jax.tree_util.tree_map(
+                lambda x: _pad_rows(x, local_seq), pcache["local"])
+        return {"local": local, "global": pcache["global"]}
+    return {"all": pcache["all"]}
+
+
 def decode_step(params: Params, cfg: ModelConfig, cache: Params,
                 tokens: jax.Array, pos: jax.Array, *, tp: int = 1,
-                impl: str = "xla") -> tuple[jax.Array, Params]:
+                impl: str = "xla",
+                row_map: jax.Array | None = None) -> tuple[jax.Array, Params]:
     """One autoregressive step: tokens (B, S) at per-slot absolute positions
     ``pos`` — (B,) int32, a scalar broadcasts.  S=1 is the serving decode
     step; S>1 is a slot prefill (one causal forward whose K/V land in the
-    cache at ``pos .. pos+S-1``)."""
+    cache at ``pos .. pos+S-1``).  ``row_map`` (B, L) routes pooled KV
+    leaves through the paged engine's page table (DESIGN.md §12)."""
     scale = cfg.name.startswith("gemma")
     x = L.embed(params["embed"], tokens, scale=scale)
     b, s, _ = x.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     positions = pos[:, None] + jnp.arange(s)
     x, new_cache = _run_layers(params, cfg, x, positions=positions, tp=tp,
-                               impl=impl, caches=cache, cache_pos=pos)
+                               impl=impl, caches=cache, cache_pos=pos,
+                               row_map=row_map)
     x = L.rms_norm(x, params["final_norm"], plus_one=cfg.sandwich_norm)
     head = params.get("head", params["embed"])
     logits = L.unembed(head, x, cfg.vocab, cap=cfg.final_softcap)

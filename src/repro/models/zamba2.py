@@ -177,11 +177,11 @@ def specs(cfg: ModelConfig) -> Params:
 
 
 def _shared_attn(shared: Params, cfg: ModelConfig, x, *, positions, tp, impl,
-                 cache=None, cache_pos=None):
+                 cache=None, cache_pos=None, row_map=None):
     h = L.rms_norm(x, shared["ln_attn"])
     att, new_cache = L.attention(shared["attn"], cfg, h, positions=positions,
                                  tp=tp, impl=impl, cache=cache,
-                                 cache_pos=cache_pos)
+                                 cache_pos=cache_pos, row_map=row_map)
     x = x + att
     x = x + L.mlp(shared["mlp"], L.rms_norm(x, shared["ln_mlp"]))
     return x, new_cache
@@ -270,10 +270,49 @@ def cache_slot_axes(cfg: ModelConfig) -> Params:
                                            is_leaf=lambda x: isinstance(x, P))}
 
 
+def init_paged_cache(cfg: ModelConfig, slots: int, rows: int, max_seq: int,
+                     tp: int = 1, dtype=None) -> Params:
+    """Paged serving cache (DESIGN.md §12): conv/SSD states stay per-slot
+    (O(1) in sequence length — nothing to page), the shared-attention KV
+    moves into one physical pool of ``rows`` rows shared across slots."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_in, h, n = _dims(cfg, tp)
+    hp = h * cfg.ssm_head_dim
+    g = _n_groups(cfg)
+    per = cfg.n_layers // g
+    return {
+        "conv": jnp.zeros((g, per, slots, CONV_K - 1, hp + 2 * n), dtype),
+        "ssd": jnp.zeros((g, per, slots, h, n, cfg.ssm_head_dim),
+                         jnp.float32),
+        "attn": jax.tree_util.tree_map(
+            lambda x: jnp.zeros((g,) + x.shape, x.dtype),
+            L.init_paged_kv_pool(cfg, rows, tp, dtype)),
+    }
+
+
+def paged_slot_axes(cfg: ModelConfig) -> Params:
+    """Scatter map for the paged cache: ``"pool"`` marks pooled KV leaves,
+    ints the slot-axis of per-slot recurrent leaves."""
+    return {"conv": 2, "ssd": 2,
+            "attn": jax.tree_util.tree_map(lambda _: "pool",
+                                           L.kv_cache_specs(cfg),
+                                           is_leaf=lambda x: isinstance(x, P))}
+
+
+def pack_paged_slot(cfg: ModelConfig, pcache: Params, max_seq: int,
+                    seq_len: int) -> Params:
+    """Paged repack: recurrent states carry as-is; attention KV keeps its
+    raw ``seq_len`` rows for the engine's page-table scatter (no padding)."""
+    if seq_len > max_seq:
+        raise ValueError(f"prompt length {seq_len} exceeds max_seq {max_seq}")
+    return pcache
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
-                tp: int = 1, impl: str = "xla"):
+                tp: int = 1, impl: str = "xla", row_map=None):
     """Decode ``tokens (B, S)`` at per-slot positions ``pos`` ((B,) int32,
-    scalar broadcasts); S>1 is a slot prefill."""
+    scalar broadcasts); S>1 is a slot prefill.  ``row_map`` (B, L) routes
+    the pooled attention KV through the paged engine's page table."""
     x = L.embed(params["embed"], tokens)
     b, s, _ = x.shape
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
@@ -289,7 +328,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
         gp, gconv, gssd, gattn = xs
         x, ns = jax.lax.scan(inner, x, (gp, {"conv": gconv, "ssd": gssd}))
         x, nattn = _shared_attn(shared, cfg, x, positions=positions, tp=tp,
-                                impl=impl, cache=gattn, cache_pos=pos)
+                                impl=impl, cache=gattn, cache_pos=pos,
+                                row_map=row_map)
         return x, (ns["conv"], ns["ssd"], nattn)
 
     x, (nconv, nssd, nattn) = jax.lax.scan(
