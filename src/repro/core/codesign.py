@@ -21,6 +21,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import obs
+
 from . import sw_dse
 from .hw_primitives import HWConfig
 from .hw_space import HWSpace
@@ -218,6 +220,25 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
     calibration fit; records + calibration are persisted to ``db_path``
     (a tuning database, ``tuner/db.py``) when given.
     """
+    with obs.span("codesign.run",
+                  {"workloads": [w.name for w in workloads],
+                   "n_trials": n_trials, "q": q, "measure": measure}
+                  if obs.enabled() else None):
+        return _codesign_body(
+            workloads, intrinsics=intrinsics, constraints=constraints,
+            target=target, n_trials=n_trials, n_init=n_init, seed=seed, q=q,
+            max_dse_extensions=max_dse_extensions, engine=engine,
+            sw_budget=sw_budget, space_axes=space_axes, cache=cache,
+            measure=measure, measure_backend=measure_backend,
+            measure_top_k=measure_top_k, measure_opts=measure_opts,
+            db_path=db_path, app=app)
+
+
+def _codesign_body(workloads: list[TensorExpr], *, intrinsics, constraints,
+                   target, n_trials, n_init, seed, q, max_dse_extensions,
+                   engine, sw_budget, space_axes, cache, measure,
+                   measure_backend, measure_top_k, measure_opts, db_path,
+                   app) -> CodesignReport:
     from .cost_model import EvalCache
 
     intrinsics = intrinsics or ["GEMM", "GEMV", "DOT", "CONV2D"]
@@ -240,62 +261,69 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
     measured_summary: dict[str, dict] = {}
     calib_samples: list = []
     measure_points: list = []   # (workload, rep, MeasureResult) for the DB
+    measure_failures: list = []  # failure dicts for the DB's diagnostics
 
     for intrinsic in intrinsics:
         intrinsic = intrinsic.upper()
         # the intrinsic must cover every workload of the application
         if not all((w.name, intrinsic) in partition for w in workloads):
             continue
-        space = HWSpace(intrinsic)
-        if space_axes:
-            space = HWSpace(intrinsic, axes={**space.axes, **space_axes})
-        fb = hw_objectives_batch(workloads, partition, intrinsic,
-                                 target=target, seed=seed,
-                                 sw_budget=sw_budget, cache=cache,
-                                 engine=engine)
-        # scalar fallback view of the same batch objective (mobo only calls
-        # it when batch_objectives is absent, i.e. never here)
-        f = lambda hw: tuple(fb([hw])[0])
-        res = mobo(space, f, batch_objectives=fb, n_init=n_init,
-                   n_trials=n_trials, seed=seed, q=q)
-        bounds = constraints.as_bounds()
-        for ext in range(1, max_dse_extensions + 1):
-            if not bounds or res.best_under(bounds) is not None:
-                break
-            # constraint-driven extension (paper Fig. 3 Step 3): nothing on
-            # the frontier meets the constraints, so widen the search
-            res = mobo(space, f, batch_objectives=fb, n_init=n_init,
-                       seed=seed, q=q, n_trials=n_trials * (2 ** ext))
-        per_intrinsic[intrinsic] = res
-        evals += res.evaluations
+        with obs.span("codesign.intrinsic",
+                      {"intrinsic": intrinsic} if obs.enabled() else None):
+            space = HWSpace(intrinsic)
+            if space_axes:
+                space = HWSpace(intrinsic, axes={**space.axes, **space_axes})
+            fb = hw_objectives_batch(workloads, partition, intrinsic,
+                                     target=target, seed=seed,
+                                     sw_budget=sw_budget, cache=cache,
+                                     engine=engine)
+            # scalar fallback view of the same batch objective (mobo only calls
+            # it when batch_objectives is absent, i.e. never here)
+            f = lambda hw: tuple(fb([hw])[0])
+            with obs.span("codesign.hw_dse"):
+                res = mobo(space, f, batch_objectives=fb, n_init=n_init,
+                           n_trials=n_trials, seed=seed, q=q)
+            bounds = constraints.as_bounds()
+            for ext in range(1, max_dse_extensions + 1):
+                if not bounds or res.best_under(bounds) is not None:
+                    break
+                # constraint-driven extension (paper Fig. 3 Step 3): nothing on
+                # the frontier meets the constraints, so widen the search
+                with obs.span("codesign.hw_dse_extension"):
+                    res = mobo(space, f, batch_objectives=fb, n_init=n_init,
+                               seed=seed, q=q, n_trials=n_trials * (2 ** ext))
+            per_intrinsic[intrinsic] = res
+            evals += res.evaluations
 
-        if not measure:
-            pick = res.best_under(constraints.as_bounds())
-            if pick is None:
+            if not measure:
+                pick = res.best_under(constraints.as_bounds())
+                if pick is None:
+                    continue
+                hw, y = pick
+                # Step 3: refine the chosen point with the full software budget —
+                # the shared cache makes every Step-2 probe of this point free
+                with obs.span("codesign.refine"):
+                    results = sw_dse.optimize_set(workloads, partition, hw,
+                                                  target=target, seed=seed,
+                                                  budget="full", cache=cache,
+                                                  engine=engine)
+                lat = sw_dse.total_latency(results)
+                sol = Solution(hw, {k: r.schedule for k, r in results.items()},
+                               min(lat, y[0]), y[1], y[2], intrinsic)
+                if best is None or sol.latency_s < best.latency_s:
+                    best = sol
                 continue
-            hw, y = pick
-            # Step 3: refine the chosen point with the full software budget —
-            # the shared cache makes every Step-2 probe of this point free
-            results = sw_dse.optimize_set(workloads, partition, hw,
-                                          target=target, seed=seed,
-                                          budget="full", cache=cache,
-                                          engine=engine)
-            lat = sw_dse.total_latency(results)
-            sol = Solution(hw, {k: r.schedule for k, r in results.items()},
-                           min(lat, y[0]), y[1], y[2], intrinsic)
-            if best is None or sol.latency_s < best.latency_s:
-                best = sol
-            continue
 
-        # Step 3 (measured): re-rank the feasible frontier by real kernels
-        sol, rank, summary = _measure_rerank(
-            workloads, partition, res, constraints, intrinsic, target, seed,
-            cache, measure_opts, measure_top_k, calib_samples,
-            measure_points, engine=engine)
-        if summary:
-            measured_summary[intrinsic] = summary
-        if sol is not None and (best is None or rank < best_rank):
-            best, best_rank = sol, rank
+            # Step 3 (measured): re-rank the feasible frontier by real kernels
+            with obs.span("codesign.measure_rerank"):
+                sol, rank, summary = _measure_rerank(
+                    workloads, partition, res, constraints, intrinsic, target,
+                    seed, cache, measure_opts, measure_top_k, calib_samples,
+                    measure_points, measure_failures, engine=engine)
+            if summary:
+                measured_summary[intrinsic] = summary
+            if sol is not None and (best is None or rank < best_rank):
+                best, best_rank = sol, rank
 
     calibration = None
     saved_db = None
@@ -304,7 +332,14 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
         calibration = _tuner.calibrate.fit(calib_samples)
         if db_path is not None:
             saved_db = _persist_tuning(db_path, app, best, calibration,
-                                       measure_points)
+                                       measure_points, measure_failures)
+
+    st = obs.state()
+    if st is not None:
+        cs = cache.stats()
+        st.metrics.gauge("evalcache.entries").set(cs["entries"])
+        st.metrics.gauge("evalcache.hits").set(cs["hits"])
+        st.metrics.gauge("evalcache.misses").set(cs["misses"])
 
     return CodesignReport(best, per_intrinsic, sizes, evals, cache.stats(),
                           measured_summary or None, calibration, saved_db)
@@ -314,7 +349,7 @@ def _measure_rerank(workloads, partition, res: DSEResult,
                     constraints: Constraints, intrinsic: str, target: str,
                     seed: int, cache, measure_opts, top_k: int,
                     calib_samples: list, measure_points: list,
-                    engine: str = "batched"
+                    measure_failures: list, engine: str = "batched"
                     ) -> tuple[Solution | None, tuple[int, float] | None,
                                dict]:
     """Measured Step 3 for one intrinsic: refine the top feasible candidates
@@ -357,6 +392,12 @@ def _measure_rerank(workloads, partition, res: DSEResult,
             else:  # no lowering / failed run: analytical latency stands in
                 total += rep.latency_s
                 cand_fallbacks += 1
+                if mres.error:
+                    measure_failures.append({
+                        "workload": w.name, "intrinsic": intrinsic,
+                        "backend": measure_opts.backend,
+                        "error_type": mres.error_type, "error": mres.error,
+                        "elapsed_s": mres.elapsed_s})
         n_fallback += cand_fallbacks
         # rank lexicographically by (fallback count, total): analytical
         # stand-ins live on a different scale than wall-clock measurements,
@@ -380,9 +421,10 @@ def _measure_rerank(workloads, partition, res: DSEResult,
 
 
 def _persist_tuning(db_path, app: str, best: Solution | None, calibration,
-                    measure_points: list):
-    """Write measured records + calibration (+ the winning app solution)
-    into the tuning database at ``db_path`` (merge-on-save, atomic)."""
+                    measure_points: list, measure_failures: list = ()):
+    """Write measured records + calibration + failure diagnostics (+ the
+    winning app solution) into the tuning database at ``db_path``
+    (merge-on-save, atomic)."""
     from dataclasses import asdict
 
     from repro.tuner.db import TuningDB, TuningRecord
@@ -395,6 +437,7 @@ def _persist_tuning(db_path, app: str, best: Solution | None, calibration,
         db.record(TuningRecord(pt.op, pt.shape, pt.dtype, pt.backend,
                                pt.block_map, mres.latency_s, rep.latency_s,
                                app))
+    db.add_failures({**f, "app": app} for f in measure_failures)
     db.set_calibration(calibration)
     if best is not None:
         db.set_app(app, {

@@ -326,9 +326,15 @@ class EvalCache:
         if len(self._data) < self._maxsize:
             self._data[key] = rep
 
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of lookups served from the cache (0.0 when untouched)."""
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
     def stats(self) -> dict:
         return {"entries": len(self._data), "hits": self.hits,
-                "misses": self.misses}
+                "misses": self.misses, "hit_rate": self.hit_rate}
 
 
 def _fingerprint(workload: TensorExpr) -> tuple:

@@ -26,6 +26,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
+
 from .hw_primitives import HWConfig
 from .hw_space import HWSpace
 from .pareto import (IncrementalHV, _reference_hypervolume, default_reference,
@@ -223,7 +225,8 @@ def mobo(space: HWSpace, objectives: Objectives, *, n_init: int = 5,
     fbatch = as_batch(objectives, batch_objectives)
 
     configs: list[HWConfig] = space.sample(rng, n_init)
-    ys = np.asarray(fbatch(configs), dtype=float)
+    with obs.span("mobo.init_design"):
+        ys = np.asarray(fbatch(configs), dtype=float)
     tried = {c.encode() for c in configs}
 
     fin = _finite_rows(ys)
@@ -237,41 +240,55 @@ def mobo(space: HWSpace, objectives: Objectives, *, n_init: int = 5,
             tracker.add(_log_rows(y))
     hv_history = [0.0] * (len(configs) - 1) + [tracker.hv]
 
+    st = obs.state()
     while len(configs) < n_trials:
-        fin = _finite_rows(ys)
-        if fin.sum() >= 2:
-            # impute illegal/failed points at a log-space penalty above the
-            # observed worst so the surrogate learns to avoid them (dropping
-            # them wastes the paper's scarce trials on infeasible regions)
-            X = np.stack([space.encode01(c) for c in configs])
-            Ylog = _log_rows(ys)
-            worst = np.nanmax(np.where(np.isfinite(Ylog), Ylog, np.nan),
-                              axis=0)
-            Y = np.where(np.isfinite(Ylog), Ylog, worst + 1.0)
-            gps = fit_gps(X, Y)  # one shared kernel sweep for all objectives
-        else:
-            gps = None
+        with obs.span("mobo.trial"):
+            fin = _finite_rows(ys)
+            if fin.sum() >= 2:
+                # impute illegal/failed points at a log-space penalty above
+                # the observed worst so the surrogate learns to avoid them
+                # (dropping them wastes the paper's scarce trials on
+                # infeasible regions)
+                X = np.stack([space.encode01(c) for c in configs])
+                Ylog = _log_rows(ys)
+                worst = np.nanmax(np.where(np.isfinite(Ylog), Ylog, np.nan),
+                                  axis=0)
+                Y = np.where(np.isfinite(Ylog), Ylog, worst + 1.0)
+                with obs.span("mobo.fit_gps"):
+                    # one shared kernel sweep for all objectives
+                    gps = fit_gps(X, Y)
+            else:
+                gps = None
 
-        cands = space.sample(rng, n_candidates, exclude=tried)
-        if not cands:
-            break
-        q_now = min(q, n_trials - len(configs))
-        if gps is None:
-            picks = cands[:q_now]
-        elif acquisition == "reference":
-            picks = [_acquire_reference(space, gps, cands, _log_rows(ys[fin]),
-                                        ref, rng, n_draws, n_candidates)]
-        else:
-            picks = _acquire(space, gps, cands, tracker, rng, n_draws,
-                             n_candidates, q_now)
+            cands = space.sample(rng, n_candidates, exclude=tried)
+            if not cands:
+                break
+            q_now = min(q, n_trials - len(configs))
+            with obs.span("mobo.acquire"):
+                if gps is None:
+                    picks = cands[:q_now]
+                elif acquisition == "reference":
+                    picks = [_acquire_reference(space, gps, cands,
+                                                _log_rows(ys[fin]), ref, rng,
+                                                n_draws, n_candidates)]
+                else:
+                    picks = _acquire(space, gps, cands, tracker, rng,
+                                     n_draws, n_candidates, q_now)
 
-        ys_new = np.asarray(fbatch(picks), dtype=float)
-        for pick, y in zip(picks, ys_new):
-            configs.append(pick)
-            tried.add(pick.encode())
-            ys = np.vstack([ys, y[None, :]])
-            if np.all(np.isfinite(y)):
-                tracker.add(_log_rows(y))
-            hv_history.append(tracker.hv)
+            with obs.span("mobo.evaluate"):
+                ys_new = np.asarray(fbatch(picks), dtype=float)
+            for pick, y in zip(picks, ys_new):
+                configs.append(pick)
+                tried.add(pick.encode())
+                ys = np.vstack([ys, y[None, :]])
+                if np.all(np.isfinite(y)):
+                    tracker.add(_log_rows(y))
+                hv_history.append(tracker.hv)
+            if st is not None:
+                # the HV-vs-trial trajectory, one point per MOBO round
+                st.tracer.instant("mobo.hv", {"trial": len(configs),
+                                              "hv": tracker.hv})
+                st.metrics.gauge("mobo.hv").set(tracker.hv)
+                st.metrics.counter("mobo.trials").inc()
 
     return DSEResult(configs, ys, hv_history, len(configs), ref)

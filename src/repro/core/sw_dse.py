@@ -34,6 +34,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import obs
+
 from .cost_model import EvalCache, _fingerprint, evaluate_batch_reports
 from .heuristic import top_k
 from .hw_primitives import HWConfig
@@ -222,6 +224,18 @@ def _run_batched(specs: list[SearchSpec], *, target: str, pool_size: int,
     vmapped DQN selection forward, ONE jitted multi-transition train scan,
     and one cost-model pass per distinct workload over the union of every
     search's revision frontier + refill."""
+    with obs.span("sw_dse.run_searches",
+                  {"n": len(specs), "rounds": rounds}
+                  if obs.enabled() else None):
+        return _run_batched_body(specs, target=target, pool_size=pool_size,
+                                 rounds=rounds, k=k,
+                                 use_qlearning=use_qlearning, cache=cache)
+
+
+def _run_batched_body(specs: list[SearchSpec], *, target: str,
+                      pool_size: int, rounds: int, k: int,
+                      use_qlearning: bool,
+                      cache: EvalCache | None) -> list[SWResult]:
     N = len(specs)
     spaces = [SoftwareSpace(sp.workload, sp.choices, sp.hw, target,
                             cache=cache) for sp in specs]
@@ -265,63 +279,65 @@ def _run_batched(specs: list[SearchSpec], *, target: str, pool_size: int,
     n_refill = pool_size - n_keep
 
     for _ in range(rounds):
-        # frontiers are feasible-only (top_k filters non-finite latencies),
-        # so they may be ragged: search si revises m_si <= k candidates.
-        # The stacked arrays stay (N, k, ...) — zero-padded rows feed the
-        # network forward (no RNG) and are masked out of replay/training —
-        # while every per-search RNG draw is sized m_si, exactly matching
-        # the reference engine's stream.
-        chosen = [top_k(pools[si], lats[si], k) for si in range(N)]
-        counts = [len(c) for c in chosen]
-        feats = np.zeros((N, k, n_feat), np.float32)
-        for si in range(N):
-            for j, i in enumerate(chosen[si]):
-                feats[si, j] = feat_of(si, pools[si][i])
-        if use_qlearning:
-            acts = bank.select_round(feats, counts=counts)    # one forward
-        else:
-            acts = np.zeros((N, k), int)
-            for si in range(N):
-                if counts[si]:
-                    acts[si, :counts[si]] = rngs[si].integers(
-                        n_moves, size=counts[si])
-        revised = [[spaces[si].apply(pools[si][i], spaces[si].moves[int(a)],
-                                     rngs[si])
-                    for i, a in zip(chosen[si], acts[si][:counts[si]])]
-                   for si in range(N)]
-        refills = [[spaces[si].random_schedule(rngs[si])
-                    for _ in range(n_refill)] for si in range(N)]
-        # the round's entire evaluation demand — every search's frontier and
-        # refill — in one union pass
-        union = _union_reports(spaces,
-                               [revised[si] + refills[si] for si in range(N)],
-                               target, cache)
-        new_lats = [remember(si, revised[si], union[si][:counts[si]])
-                    for si in range(N)]
-        refill_lats = [remember(si, refills[si], union[si][counts[si]:])
-                       for si in range(N)]
-
-        if use_qlearning:
-            next_feats = np.zeros((N, k, n_feat), np.float32)
-            rewards = np.zeros((N, k))
+        with obs.span("sw_dse.round"):
+            # frontiers are feasible-only (top_k filters non-finite latencies),
+            # so they may be ragged: search si revises m_si <= k candidates.
+            # The stacked arrays stay (N, k, ...) — zero-padded rows feed the
+            # network forward (no RNG) and are masked out of replay/training —
+            # while every per-search RNG draw is sized m_si, exactly matching
+            # the reference engine's stream.
+            chosen = [top_k(pools[si], lats[si], k) for si in range(N)]
+            counts = [len(c) for c in chosen]
+            feats = np.zeros((N, k, n_feat), np.float32)
             for si in range(N):
                 for j, i in enumerate(chosen[si]):
-                    next_feats[si, j] = feat_of(si, revised[si][j])
-                    rewards[si, j] = _reward(lats[si][i], new_lats[si][j])
-            bank.train_round(feats, acts, rewards, next_feats,
-                             counts=counts)                   # one scan
+                    feats[si, j] = feat_of(si, pools[si][i])
+            if use_qlearning:
+                acts = bank.select_round(feats, counts=counts)    # one forward
+            else:
+                acts = np.zeros((N, k), int)
+                for si in range(N):
+                    if counts[si]:
+                        acts[si, :counts[si]] = rngs[si].integers(
+                            n_moves, size=counts[si])
+            revised = [[spaces[si].apply(pools[si][i], spaces[si].moves[int(a)],
+                                         rngs[si])
+                        for i, a in zip(chosen[si], acts[si][:counts[si]])]
+                       for si in range(N)]
+            refills = [[spaces[si].random_schedule(rngs[si])
+                        for _ in range(n_refill)] for si in range(N)]
+            # the round's entire evaluation demand — every search's frontier and
+            # refill — in one union pass
+            union = _union_reports(spaces,
+                                   [revised[si] + refills[si] for si in range(N)],
+                                   target, cache)
+            new_lats = [remember(si, revised[si], union[si][:counts[si]])
+                        for si in range(N)]
+            refill_lats = [remember(si, refills[si], union[si][counts[si]:])
+                           for si in range(N)]
 
-        for si in range(N):
-            pools[si] += revised[si]
-            lats[si] += new_lats[si]
-            evals[si] += counts[si]
-            keep = _keep_indices(pools[si], lats[si], n_keep)
-            pools[si] = [pools[si][i] for i in keep]
-            lats[si] = [lats[si][i] for i in keep]
-            pools[si] += refills[si]
-            lats[si] += refill_lats[si]
-            evals[si] += n_refill
-            history[si].append(min(lats[si]) if lats[si] else math.inf)
+            if use_qlearning:
+                next_feats = np.zeros((N, k, n_feat), np.float32)
+                rewards = np.zeros((N, k))
+                for si in range(N):
+                    for j, i in enumerate(chosen[si]):
+                        next_feats[si, j] = feat_of(si, revised[si][j])
+                        rewards[si, j] = _reward(lats[si][i], new_lats[si][j])
+                with obs.span("sw_dse.train_round"):
+                    bank.train_round(feats, acts, rewards, next_feats,
+                                     counts=counts)               # one scan
+
+            for si in range(N):
+                pools[si] += revised[si]
+                lats[si] += new_lats[si]
+                evals[si] += counts[si]
+                keep = _keep_indices(pools[si], lats[si], n_keep)
+                pools[si] = [pools[si][i] for i in keep]
+                lats[si] = [lats[si][i] for i in keep]
+                pools[si] += refills[si]
+                lats[si] += refill_lats[si]
+                evals[si] += n_refill
+                history[si].append(min(lats[si]) if lats[si] else math.inf)
 
     out = []
     for si in range(N):

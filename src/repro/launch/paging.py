@@ -21,6 +21,8 @@ import collections
 import itertools
 from typing import TYPE_CHECKING
 
+from repro import obs
+
 if TYPE_CHECKING:  # pragma: no cover - type-only import
     from repro.launch.serve import Request
 
@@ -62,6 +64,10 @@ class PageAllocator:
                 f"allocation of {n} pages exceeds {len(self._free)} free")
         pages, self._free = self._free[:n], self._free[n:]
         self._held.update(pages)
+        st = obs.state()
+        if st is not None:
+            st.metrics.counter("pages.alloc").inc(n)
+            st.metrics.gauge("pages.free").set(len(self._free))
         return pages
 
     def free(self, pages: list[int]) -> None:
@@ -70,6 +76,10 @@ class PageAllocator:
                 raise ValueError(f"page {p} is not currently allocated")
             self._held.discard(p)
         self._free = sorted(self._free + list(pages))
+        st = obs.state()
+        if st is not None:
+            st.metrics.counter("pages.freed").inc(len(pages))
+            st.metrics.gauge("pages.free").set(len(self._free))
 
     def rows(self, pages: list[int], n_rows: int) -> list[int]:
         """Physical row index for each of the first ``n_rows`` logical rows
@@ -181,6 +191,11 @@ class PriorityScheduler:
         q = self.queues.get(req.priority)
         if not q or req not in q:
             raise ValueError(f"request {req.rid} is not waiting")
+        st = obs.state()
+        if st is not None and self.effective_priority(req) < req.priority:
+            # the no-starvation mechanism actually fired: this placement
+            # was earned through aging, not nominal class
+            st.metrics.counter("sched.aged_admits").inc()
         q.remove(req)
         # _enqueued_at is deliberately KEPT: the aging clock runs from first
         # submission across preemptions, so an aged-in low-priority request

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_host_mesh
 from repro.launch.paging import PageAllocator, PriorityScheduler
@@ -61,6 +62,7 @@ class Request:
     submit_seq: int = -1           # stamped by the scheduler at submit
     preemptions: int = 0
     submit_time: float | None = None
+    admit_time: float | None = None    # first slot placement (queue exit)
     first_token_time: float | None = None
     finish_time: float | None = None
 
@@ -84,6 +86,62 @@ class Request:
         if self.submit_time is None or self.first_token_time is None:
             return None
         return self.first_token_time - self.submit_time
+
+
+# -- request-lifecycle telemetry (DESIGN.md §13) ----------------------------
+# Each helper is a single obs.state() read when tracing is disabled: args
+# dicts and metric lookups only happen behind the `st is not None` guard
+# (the decode hot path's zero-allocation contract, gated by bench_obs).
+
+
+def _obs_submit(req: Request) -> None:
+    if req.submit_time is None:
+        req.submit_time = time.time()
+    st = obs.state()
+    if st is not None:
+        st.tracer.instant("req.submit", {"rid": req.rid,
+                                         "prompt": len(req.prompt),
+                                         "priority": req.priority})
+        st.metrics.counter("serve.submitted").inc()
+
+
+def _obs_admit(req: Request, slot: int, resumed: bool = False) -> None:
+    first = req.admit_time is None
+    if first:
+        req.admit_time = time.time()
+    st = obs.state()
+    if st is not None:
+        st.tracer.instant("req.resume" if resumed else "req.admit",
+                          {"rid": req.rid, "slot": slot})
+        if resumed:
+            st.metrics.counter("serve.resumes").inc()
+        if first and req.submit_time is not None:
+            st.metrics.histogram("serve.queue_wait_s").observe(
+                req.admit_time - req.submit_time)
+
+
+def _obs_first_token(req: Request) -> None:
+    if req.first_token_time is not None:
+        return
+    req.first_token_time = time.time()
+    st = obs.state()
+    if st is not None:
+        st.tracer.instant("req.first_token", {"rid": req.rid})
+        if req.submit_time is not None:
+            st.metrics.histogram("serve.ttft_s").observe(
+                req.first_token_time - req.submit_time)
+
+
+def _obs_finish(req: Request) -> None:
+    req.finish_time = time.time()
+    st = obs.state()
+    if st is not None:
+        st.tracer.instant("req.retire", {"rid": req.rid,
+                                         "tokens": len(req.out)})
+        st.metrics.counter("serve.retired").inc()
+        if req.submit_time is not None:
+            st.metrics.histogram("serve.e2e_s").observe(
+                req.finish_time - req.submit_time)
 
 
 class FCFSScheduler:
@@ -200,8 +258,7 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)} tokens) must "
                 f"leave room under its context budget {self._budget(req)}")
-        if req.submit_time is None:
-            req.submit_time = time.time()
+        _obs_submit(req)
         self.scheduler.submit(req)
 
     # -- the serving loop --------------------------------------------------
@@ -218,20 +275,21 @@ class ServeEngine:
         """
         finished = []
         for slot, req in self.scheduler.admit():
+            _obs_admit(req, slot)
             prompt = jnp.asarray(req.prompt[None, :])
-            logits, slot_cache = self._prefill(self.params, prompt)
-            self.cache = self._write_slot(self.cache, slot_cache,
-                                          jnp.int32(slot))
+            with obs.span("serve.prefill"):
+                logits, slot_cache = self._prefill(self.params, prompt)
+                self.cache = self._write_slot(self.cache, slot_cache,
+                                              jnp.int32(slot))
             self.pos[slot] = len(req.prompt)
             tok = int(jnp.argmax(logits[0, -1]))
             req.next_token = tok
             req.out.append(tok)
-            if req.first_token_time is None:
-                req.first_token_time = time.time()
+            _obs_first_token(req)
             self.prefill_tokens += len(req.prompt)
             self.generated += 1
             if len(req.out) >= req.max_new:
-                req.finish_time = time.time()
+                _obs_finish(req)
                 finished.append(self.scheduler.retire(slot))
         return finished
 
@@ -245,9 +303,10 @@ class ServeEngine:
         toks = np.zeros((self.n_slots, 1), np.int32)
         for slot, req in active.items():
             toks[slot, 0] = req.next_token
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(self.pos, jnp.int32))
+        with obs.span("serve.decode_step"):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.pos, jnp.int32))
         self.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for slot, req in active.items():
@@ -258,8 +317,13 @@ class ServeEngine:
             self.generated += 1
             if len(req.out) >= req.max_new \
                     or self.pos[slot] >= self._budget(req):
-                req.finish_time = time.time()
+                _obs_finish(req)
                 finished.append(self.scheduler.retire(slot))
+        st = obs.state()
+        if st is not None:
+            st.metrics.histogram(
+                "serve.decode_batch",
+                obs.DEFAULT_COUNT_EDGES).observe(len(active))
         return finished
 
     def run(self) -> list[Request]:
@@ -372,8 +436,7 @@ class PagedServeEngine:
                 raise ValueError(
                     f"request {req.rid}: needs {self.alloc.pages_for(peak)} "
                     f"pages at peak, pool only has {self.alloc.n_pages}")
-        if req.submit_time is None:
-            req.submit_time = time.time()
+        _obs_submit(req)
         self.scheduler.submit(req)
 
     # -- paging ------------------------------------------------------------
@@ -443,6 +506,10 @@ class PagedServeEngine:
         self._release(slot)
         self.scheduler.preempt(slot)
         self.preemptions += 1
+        st = obs.state()
+        if st is not None:
+            st.tracer.instant("req.preempt", {"rid": req.rid, "slot": slot})
+            st.metrics.counter("serve.preemptions").inc()
 
     def _swap_out(self, slot: int, req: Request) -> None:
         rows = int(self.pos[slot])
@@ -478,6 +545,11 @@ class PagedServeEngine:
     # -- the serving loop --------------------------------------------------
 
     def _start(self, slot: int, req: Request) -> None:
+        # preemptions > 0 without a swap snapshot means the request was
+        # preempted mid-prefill: the restart is still a resume of its
+        # lifecycle, not a fresh admission
+        _obs_admit(req, slot,
+                   resumed=req.rid in self._suspended or req.preemptions > 0)
         if req.rid in self._suspended:
             self._swap_in(slot, req)
             return
@@ -511,11 +583,18 @@ class PagedServeEngine:
             req = pf.req
             chunk = min(self.prefill_chunk, len(req.prompt) - pf.done)
             toks = jnp.asarray(req.prompt[None, pf.done:pf.done + chunk])
-            logits, pf.cache = self._decode(
-                self.params, pf.cache, toks, jnp.asarray([pf.done],
-                                                         jnp.int32))
+            with obs.span("serve.prefill_chunk"):
+                logits, pf.cache = self._decode(
+                    self.params, pf.cache, toks, jnp.asarray([pf.done],
+                                                             jnp.int32))
             pf.done += chunk
             self.prefill_tokens += chunk
+            st = obs.state()
+            if st is not None:
+                st.tracer.instant("req.prefill_chunk",
+                                  {"rid": req.rid, "done": pf.done,
+                                   "of": len(req.prompt)})
+                st.metrics.counter("serve.prefill_chunks").inc()
             if pf.done < len(req.prompt):
                 continue
             del self._prefills[slot]
@@ -524,22 +603,39 @@ class PagedServeEngine:
     def _commit(self, slot: int, req: Request, pcache, logits,
                 finished: list[Request]) -> None:
         """Prefill done: seed the first token, then move the prompt's KV
-        into freshly allocated pool pages + the slot's per-slot leaves."""
+        into freshly allocated pool pages + the slot's per-slot leaves.
+
+        Pages are secured BEFORE the first token is emitted: nothing is
+        committed yet, so a page-pressure failure here must requeue the
+        request as a plain prefill restart.  Routing it through
+        ``_preempt``/``_swap_out`` instead would snapshot the slot's idle
+        ``pos`` sentinel (``max_seq`` rows — more pages than the whole pool
+        for small pools, i.e. permanently unadmittable) and the
+        already-appended first token would be emitted a second time when
+        the prefill reruns.
+        """
+        n = len(req.prompt)
+        need = self.alloc.pages_for(n) if self._has_pool else 0
+        if req.max_new > 1 and self.alloc.n_free < need \
+                and not self._reclaim(need, slot):
+            self._release(slot)
+            self.scheduler.preempt(slot)
+            self.preemptions += 1
+            st = obs.state()
+            if st is not None:
+                st.tracer.instant("req.preempt", {"rid": req.rid,
+                                                  "slot": slot})
+                st.metrics.counter("serve.preemptions").inc()
+            return
         tok = int(jnp.argmax(logits[0, -1]))
         req.next_token = tok
         req.out.append(tok)
         self.generated += 1
-        if req.first_token_time is None:
-            req.first_token_time = time.time()
+        _obs_first_token(req)
         if len(req.out) >= req.max_new:
-            req.finish_time = time.time()
+            _obs_finish(req)
             finished.append(self.scheduler.retire(slot))
             self.pos[slot] = self.max_seq
-            return
-        n = len(req.prompt)
-        need = self.alloc.pages_for(n) if self._has_pool else 0
-        if self.alloc.n_free < need and not self._reclaim(need, slot):
-            self._preempt(slot)      # back to the queue; prefill redone
             return
         if need:
             self._map_pages(slot, self.alloc.alloc(need))
@@ -566,9 +662,10 @@ class PagedServeEngine:
         for s in decoding:
             toks[s, 0] = self.scheduler.slots[s].next_token
             pos[s] = self.pos[s]
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks),
-            jnp.asarray(pos, jnp.int32), jnp.asarray(self.row_map))
+        with obs.span("serve.decode_step"):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(self.row_map))
         self.decode_steps += 1
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for s in decoding:
@@ -580,18 +677,33 @@ class PagedServeEngine:
             self.generated += 1
             if len(req.out) >= req.max_new \
                     or self.pos[s] >= self._budget(req):
-                req.finish_time = time.time()
+                _obs_finish(req)
                 finished.append(self.scheduler.retire(s))
                 self._release(s)
+        st = obs.state()
+        if st is not None:
+            st.metrics.histogram(
+                "serve.decode_batch",
+                obs.DEFAULT_COUNT_EDGES).observe(len(decoding))
 
     def step(self) -> list[Request]:
         """One engine tick: admissions, one prefill chunk per prefilling
         slot, one batched decode step.  Returns requests finished now."""
         self.scheduler.tick()
         finished: list[Request] = []
-        self._admit_new()
-        self._prefill_tick(finished)
-        self._decode_tick(finished)
+        with obs.span("serve.step"):
+            with obs.span("serve.admit"):
+                self._admit_new()
+            with obs.span("serve.prefill_tick"):
+                self._prefill_tick(finished)
+            with obs.span("serve.decode_tick"):
+                self._decode_tick(finished)
+        st = obs.state()
+        if st is not None:
+            m = st.metrics
+            m.gauge("serve.pages_free").set(self.alloc.n_free)
+            m.gauge("serve.slots_active").set(self.scheduler.n_active)
+            m.gauge("serve.waiting").set(self.scheduler.n_waiting)
         return finished
 
     def run(self) -> list[Request]:
@@ -599,6 +711,44 @@ class PagedServeEngine:
         while self.scheduler.has_work():
             done.extend(self.step())
         return sorted(done, key=lambda r: r.rid)
+
+
+def _latency_summary(done: list[Request]) -> dict:
+    """Per-run latency summaries through the fixed-bucket histogram
+    machinery (DESIGN.md §13), replacing the old ad-hoc per-request
+    percentile scans:
+
+      * ``ttft_s``       — submit → first token (the quantity the old
+        ``queue_latency`` property reports, kept for compatibility);
+      * ``queue_wait_s`` — submit → first slot placement (pure queueing,
+        excludes prefill).
+
+    Buckets span the observed range at 1/512 resolution, so the quantile
+    interpolation error is negligible against the serving gates."""
+    from repro.obs.metrics import Histogram, linear_edges
+
+    def summarize(vals: list[float | None]) -> dict:
+        vals = [v for v in vals if v is not None]
+        if not vals:
+            return {"count": 0, "mean": None,
+                    "p50": None, "p95": None, "p99": None}
+        lo, hi = min(vals), max(vals)
+        if hi <= lo:   # degenerate range: every quantile is the value
+            return {"count": len(vals), "mean": lo,
+                    "p50": lo, "p95": lo, "p99": lo}
+        h = Histogram(linear_edges(lo, hi, 512))
+        for v in vals:
+            h.observe(v)
+        return {"count": h.count, "mean": h.mean, "p50": h.quantile(0.5),
+                "p95": h.quantile(0.95), "p99": h.quantile(0.99)}
+
+    return {
+        "ttft_s": summarize([r.queue_latency for r in done]),
+        "queue_wait_s": summarize(
+            [r.admit_time - r.submit_time
+             if r.admit_time is not None and r.submit_time is not None
+             else None for r in done]),
+    }
 
 
 def serve_requests(cfg, params, requests, *, slots: int = 4,
@@ -627,7 +777,8 @@ def serve_requests(cfg, params, requests, *, slots: int = 4,
     return done, {"decode_steps": eng.decode_steps,
                   "prefill_tokens": eng.prefill_tokens,
                   "generated": eng.generated,
-                  "preemptions": getattr(eng, "preemptions", 0)}
+                  "preemptions": getattr(eng, "preemptions", 0),
+                  **_latency_summary(done)}
 
 
 def make_requests(cfg, n: int, max_new: int, seed: int = 0,
@@ -683,7 +834,18 @@ def main() -> None:
     ap.add_argument("--tuned-app", default=None,
                     help="co-design app whose tuned kernel blocks to "
                          "install (default: the arch name)")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable the observability layer (DESIGN.md §13) "
+                         "and export telemetry + a Perfetto trace")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="telemetry artifact path (default: "
+                         "artifacts/telemetry.json)")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace path (default: artifacts/trace.json)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -717,6 +879,17 @@ def main() -> None:
           f"{stats['decode_steps']} decode steps "
           f"({stats['preemptions']} preemptions), "
           f"{stats['generated'] / dt:.1f} tok/s")
+    ttft = stats["ttft_s"]
+    if ttft["count"]:
+        print(f"ttft p50={ttft['p50']:.4f}s p95={ttft['p95']:.4f}s "
+              f"p99={ttft['p99']:.4f}s")
+    if args.trace:
+        tpath = obs.export_telemetry(args.telemetry_out)
+        cpath = obs.export_chrome_trace(args.trace_out)
+        st = obs.state()
+        print(f"telemetry: {len(st.tracer)} events "
+              f"({st.tracer.dropped} dropped), {len(st.metrics)} metrics "
+              f"-> {tpath} + {cpath} (open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

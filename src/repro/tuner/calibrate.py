@@ -168,13 +168,31 @@ class CalibratedCostModel:
     same EvalCache protocol (the cache stores *analytical* reports, so one
     cache serves both the raw and the calibrated model), latency corrected
     per the workload's op family; power and area pass through unchanged.
+    An EvalCache attached at construction becomes the default for every
+    evaluate call, and its ``cache_hits``/``cache_misses``/``cache_hit_rate``
+    are forwarded here so explorers can report reuse without reaching
+    through to the cache object.
     """
 
     def __init__(self, calibration: Calibration,
-                 target: str = "tpu"):
+                 target: str = "tpu", cache: EvalCache | None = None):
         self.calibration = calibration
         self.target = target
+        self.cache = cache     # default EvalCache for evaluate/evaluate_batch
         self._op_cache: dict[tuple, str | None] = {}
+
+    @property
+    def cache_hits(self) -> int:
+        """Hits of the attached EvalCache (0 when none is attached)."""
+        return self.cache.hits if self.cache is not None else 0
+
+    @property
+    def cache_misses(self) -> int:
+        return self.cache.misses if self.cache is not None else 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache.hit_rate if self.cache is not None else 0.0
 
     def _op(self, workload: TensorExpr) -> str | None:
         key = _fingerprint(workload)
@@ -191,7 +209,7 @@ class CalibratedCostModel:
         import dataclasses
 
         rep = evaluate(workload, schedule, hw, target or self.target,
-                       cache=cache)
+                       cache=cache if cache is not None else self.cache)
         op = self._op(workload)
         if op is None or not rep.legal:
             return rep
@@ -203,8 +221,9 @@ class CalibratedCostModel:
                        target: str | None = None,
                        cache: EvalCache | None = None) -> np.ndarray:
         """(N, 3) minimized objectives with calibrated latency."""
-        reports = evaluate_batch_reports(workload, hw_configs, schedules,
-                                         target or self.target, cache=cache)
+        reports = evaluate_batch_reports(
+            workload, hw_configs, schedules, target or self.target,
+            cache=cache if cache is not None else self.cache)
         op = self._op(workload)
         corr = self.calibration.for_op(op) if op else IDENTITY
         ys = np.empty((len(reports), 3))

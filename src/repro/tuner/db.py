@@ -21,6 +21,7 @@ rather than clobber.
 """
 from __future__ import annotations
 
+import json
 import math
 import warnings
 from contextlib import contextmanager
@@ -33,6 +34,9 @@ from .calibrate import Calibration
 
 DB_VERSION = 1
 DEFAULT_DB_PATH = Path("artifacts/tuning_db.json")
+# the "failures" section is bounded: it is diagnostic data (which candidates
+# fail, how, and how much wall clock they burn), not a ledger
+MAX_FAILURES = 256
 
 
 def _key(op: str, shape, dtype: str, backend: str) -> str:
@@ -81,6 +85,7 @@ class TuningDB:
         self.records: dict[str, TuningRecord] = {}
         self.calibration = Calibration()
         self.apps: dict[str, dict] = {}
+        self.failures: list[dict] = []
 
     # -- loading --------------------------------------------------------------
     @classmethod
@@ -126,6 +131,13 @@ class TuningDB:
                 continue
             if app not in self.apps:
                 self.apps[app] = sol
+        fails = data.get("failures", [])
+        if isinstance(fails, list):
+            self.add_failures(f for f in fails if isinstance(f, dict))
+        elif "failures" in data:
+            warnings.warn(f"tuning db {self.path}: ignoring 'failures' "
+                          f"section of type {type(fails).__name__}",
+                          stacklevel=4)
 
     def _merge_record(self, rec: TuningRecord) -> None:
         cur = self.records.get(rec.key)
@@ -148,6 +160,21 @@ class TuningDB:
     def set_app(self, app: str, solution: dict) -> None:
         self.apps[app] = solution
 
+    def add_failures(self, failures) -> None:
+        """Append measurement-failure records (plain dicts: workload,
+        error_type, error, elapsed_s, backend, app...).  Deduplicated by
+        content — re-absorbing a file this db was saved to is a no-op — and
+        capped at MAX_FAILURES most-recent entries."""
+        self.failures.extend(dict(f) for f in failures)
+        seen: set[str] = set()
+        out: list[dict] = []
+        for f in self.failures:
+            k = json.dumps(f, sort_keys=True, default=str)
+            if k not in seen:
+                seen.add(k)
+                out.append(f)
+        self.failures = out[-MAX_FAILURES:]
+
     # -- lookups --------------------------------------------------------------
     def best_config(self, op: str, shape, dtype: str = "float32",
                     backend: str = "interpret") -> dict[str, int] | None:
@@ -162,13 +189,16 @@ class TuningDB:
 
     # -- persistence ----------------------------------------------------------
     def to_dict(self) -> dict:
-        return {
+        out = {
             "version": DB_VERSION,
             "records": {k: r.to_dict()
                         for k, r in sorted(self.records.items())},
             "calibration": self.calibration.to_dict(),
             "apps": dict(sorted(self.apps.items())),
         }
+        if self.failures:   # optional section: old artifacts stay byte-stable
+            out["failures"] = list(self.failures)
+        return out
 
     def save(self, path: Path | str | None = None) -> Path:
         """Merge-on-save + atomic write: re-read whatever is on disk now,
@@ -189,6 +219,7 @@ class TuningDB:
             merged.calibration = Calibration(dict(
                 self.calibration.corrections))
             merged.apps = dict(self.apps)
+            merged.failures = [dict(f) for f in self.failures]
             merged._absorb(on_disk)
             # our freshly-set apps/calibration win over stale on-disk ones
             merged.apps.update(self.apps)

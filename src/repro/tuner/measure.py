@@ -34,6 +34,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.hw_primitives import HWConfig
 from repro.core.sw_primitives import Schedule
 from repro.core.tst import TensorExpr
@@ -60,12 +61,18 @@ class KernelPoint:
 @dataclass(frozen=True)
 class MeasureResult:
     """Timed outcome of one candidate.  ``latency_s`` is the median over
-    ``times_s``; a failed lowering/run carries +inf and the error string."""
+    ``times_s``; a failed lowering/run carries +inf and the error string.
+    ``elapsed_s`` is the wall clock the *attempt* cost (lower + warmup +
+    repeats, or however far a failure got) and ``error_type`` the exception
+    class name — together they make failure populations analyzable from the
+    tuning DB (which schedules fail, how, and how much time they burn)."""
 
     latency_s: float
     times_s: tuple[float, ...] = ()
     point: KernelPoint | None = None
     error: str = ""
+    elapsed_s: float = 0.0
+    error_type: str = ""
 
     @property
     def ok(self) -> bool:
@@ -237,16 +244,39 @@ def _time(thunk: Callable, opts: MeasureOptions) -> tuple[float, ...]:
     return tuple(times)
 
 
+def _fail_result(e: Exception, point: KernelPoint | None,
+                 elapsed_s: float, workload: TensorExpr) -> MeasureResult:
+    """Failure capture: invalid candidates become inf, with the exception
+    class and the wall clock the attempt burned recorded alongside."""
+    st = obs.state()
+    if st is not None:
+        st.metrics.counter("tuner.measure_failures").inc()
+        st.tracer.instant("tuner.measure_fail",
+                          {"workload": workload.name,
+                           "error_type": type(e).__name__})
+    return MeasureResult(math.inf, (), point, f"{type(e).__name__}: {e}",
+                         elapsed_s=elapsed_s,
+                         error_type=type(e).__name__)
+
+
 def measure_one(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
                 opts: MeasureOptions | None = None) -> MeasureResult:
     """Lower and time one candidate; never raises on candidate failure."""
     opts = opts or MeasureOptions()
-    try:
-        point, thunk = lower(workload, hw, schedule, opts)
-        times = _time(thunk, opts)
-    except Exception as e:  # failure capture: invalid candidates become inf
-        return MeasureResult(math.inf, (), None, f"{type(e).__name__}: {e}")
-    return MeasureResult(float(np.median(times)), times, point)
+    with obs.span("tuner.measure",
+                  {"workload": workload.name, "backend": opts.backend}
+                  if obs.enabled() else None):
+        t0 = time.perf_counter()
+        try:
+            point, thunk = lower(workload, hw, schedule, opts)
+            times = _time(thunk, opts)
+        except Exception as e:
+            return _fail_result(e, None, time.perf_counter() - t0, workload)
+        st = obs.state()
+        if st is not None:
+            st.metrics.counter("tuner.measured").inc()
+        return MeasureResult(float(np.median(times)), times, point,
+                             elapsed_s=time.perf_counter() - t0)
 
 
 def measure_batch(workload: TensorExpr,
@@ -275,20 +305,28 @@ def measure_batch(workload: TensorExpr,
     memo: dict[KernelPoint, MeasureResult] = {}
     out: list[MeasureResult] = []
     for hw, sched in zip(hws, schedules):
-        try:
-            point, thunk = lower(workload, hw, sched, opts)
-        except Exception as e:
-            out.append(MeasureResult(math.inf, (), None,
-                                     f"{type(e).__name__}: {e}"))
-            continue
-        res = memo.get(point)
-        if res is None:
+        with obs.span("tuner.measure",
+                      {"workload": workload.name, "backend": opts.backend}
+                      if obs.enabled() else None):
+            t0 = time.perf_counter()
             try:
-                times = _time(thunk, opts)
-                res = MeasureResult(float(np.median(times)), times, point)
+                point, thunk = lower(workload, hw, sched, opts)
             except Exception as e:
-                res = MeasureResult(math.inf, (), point,
-                                    f"{type(e).__name__}: {e}")
-            memo[point] = res
-        out.append(res)
+                out.append(_fail_result(e, None, time.perf_counter() - t0,
+                                        workload))
+                continue
+            res = memo.get(point)
+            if res is None:
+                try:
+                    times = _time(thunk, opts)
+                    res = MeasureResult(float(np.median(times)), times, point,
+                                        elapsed_s=time.perf_counter() - t0)
+                    st = obs.state()
+                    if st is not None:
+                        st.metrics.counter("tuner.measured").inc()
+                except Exception as e:
+                    res = _fail_result(e, point, time.perf_counter() - t0,
+                                       workload)
+                memo[point] = res
+            out.append(res)
     return out

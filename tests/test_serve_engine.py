@@ -402,6 +402,36 @@ def test_paged_preemption_under_pressure_is_bit_exact():
         assert order == sorted(order)
 
 
+def test_commit_time_page_pressure_restarts_prefill_cleanly():
+    """Regression: a request whose prefill finishes while the pool is too
+    full to commit must requeue as a plain prefill restart.  The old path
+    swapped it out through ``_preempt`` with the slot's idle ``pos``
+    sentinel (``max_seq`` rows — 16 pages against an 8-page pool, so the
+    request could never be admitted again: a livelock with the whole pool
+    free), and its already-emitted first token would have been duplicated
+    by the rerun.  Long prompts on a tight pool hit this reliably."""
+    cfg, params = _family("qwen3-8b")
+    reqs = make_requests(cfg, 10, 4, seed=0, long_every=3,
+                         priorities=(0, 1, 2))
+    ref = _reference_outputs(cfg, params, reqs, max_seq=64)
+    eng = PagedServeEngine(cfg, params, slots=3, page_size=4, n_pages=8,
+                           prefill_chunk=4)
+    for r in reqs:
+        eng.submit(Request(r.rid, r.prompt.copy(), r.max_new,
+                           priority=r.priority))
+    done = []
+    for _ in range(200):                       # livelocked forever before
+        done.extend(eng.step())
+        if len(done) == len(reqs):
+            break
+    assert len(done) == len(reqs), (
+        f"engine stalled: {len(done)}/{len(reqs)} finished, "
+        f"{eng.alloc.n_free} pages free")
+    assert eng.preemptions > 0                 # pressure actually fired
+    for r in done:
+        assert r.out == ref[r.rid] and len(r.out) == r.max_new
+
+
 def test_paged_low_priority_is_not_starved():
     """Sustained high-priority load on one slot: aging must eventually
     admit (and keep, unpreempted) the low-priority request before the
