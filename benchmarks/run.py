@@ -71,11 +71,29 @@ def main() -> None:
         # persist whatever completed even if a benchmark crashes outright
         RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
         RESULTS_PATH.write_text(json.dumps(
-            {"generated_unix": int(time.time()), "results": results},
+            {"generated_unix": int(time.time()), "results": results,
+             "quarantined_candidates": _quarantined_count()},
             indent=2) + "\n")
         print(f"# wrote {RESULTS_PATH}", flush=True)
     if failures:
         raise SystemExit(f"gated benchmarks failed: {', '.join(failures)}")
+
+
+def _quarantined_count() -> int:
+    """Persistently-failing kernel candidates in the default tuning DB
+    (DESIGN.md §14) — surfaced so a growing quarantine is visible in the
+    tracked benchmark artifact, not buried in the DB."""
+    try:
+        from repro.tuner.db import DEFAULT_DB_PATH, TuningDB
+
+        n = len(TuningDB.load(DEFAULT_DB_PATH).quarantine)
+    except Exception:
+        return 0
+    if n:
+        print(f"# WARNING: {n} kernel candidate(s) quarantined in "
+              f"{DEFAULT_DB_PATH} — these are skipped by measurement runs",
+              flush=True)
+    return n
 
 
 if __name__ == "__main__":

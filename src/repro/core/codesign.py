@@ -17,6 +17,7 @@ Baselines implemented alongside (paper §VII-D/E):
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -189,8 +190,8 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
              sw_budget: str = "small", space_axes: dict | None = None,
              cache=None, measure: bool = False,
              measure_backend: str = "interpret", measure_top_k: int = 3,
-             measure_opts=None, db_path=None, app: str = "default"
-             ) -> CodesignReport:
+             measure_opts=None, db_path=None, app: str = "default",
+             checkpoint_dir=None, resume_from=None) -> CodesignReport:
     """Full HASCO flow over one application (= workload set).
 
     One :class:`~repro.core.cost_model.EvalCache` is shared across the whole
@@ -218,7 +219,20 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
     latency (workloads without a kernel lowering fall back to their
     analytical latency).  All (analytical, measured) pairs feed a per-op
     calibration fit; records + calibration are persisted to ``db_path``
-    (a tuning database, ``tuner/db.py``) when given.
+    (a tuning database, ``tuner/db.py``) when given.  Candidates the DB has
+    *quarantined* (persistently failing kernels) are skipped unrun, and
+    newly retry-exhausted failures join the quarantine on persist.
+
+    Robustness (DESIGN.md §14): with ``checkpoint_dir`` set, the driver
+    checkpoints its round state after every completed intrinsic — MOBO
+    observations (the DSEResult), running best solution, calibration
+    samples, and the EvalCache contents — through
+    :class:`~repro.ft.CheckpointManager` payloads.  ``resume_from`` restores
+    the newest clean checkpoint and skips the already-completed intrinsics;
+    because each intrinsic's DSE is self-seeded and the cache only affects
+    speed, a killed-and-resumed run commits a solution bit-identical to an
+    uninterrupted one.  A checkpoint written by a *different* invocation
+    (mismatched workloads/parameters) is ignored with a warning.
     """
     with obs.span("codesign.run",
                   {"workloads": [w.name for w in workloads],
@@ -231,23 +245,48 @@ def codesign(workloads: list[TensorExpr], *, intrinsics: list[str] = None,
             sw_budget=sw_budget, space_axes=space_axes, cache=cache,
             measure=measure, measure_backend=measure_backend,
             measure_top_k=measure_top_k, measure_opts=measure_opts,
-            db_path=db_path, app=app)
+            db_path=db_path, app=app, checkpoint_dir=checkpoint_dir,
+            resume_from=resume_from)
+
+
+def _codesign_signature(workloads, intrinsics, constraints, target, n_trials,
+                        n_init, seed, q, max_dse_extensions, engine,
+                        sw_budget, space_axes, measure, measure_backend,
+                        measure_top_k) -> tuple:
+    """What makes two codesign invocations "the same run" for resume: the
+    workload identities and every parameter that steers the search.  A
+    checkpoint whose signature differs must not be resumed (it would splice
+    state from a different trajectory into this one)."""
+    from .cost_model import _fingerprint
+
+    return (tuple(_fingerprint(w) for w in workloads),
+            tuple(i.upper() for i in intrinsics),
+            (constraints.latency_s, constraints.power_w,
+             constraints.area_um2),
+            target, n_trials, n_init, seed, q, max_dse_extensions, engine,
+            sw_budget, repr(sorted((space_axes or {}).items())),
+            measure, measure_backend, measure_top_k)
 
 
 def _codesign_body(workloads: list[TensorExpr], *, intrinsics, constraints,
                    target, n_trials, n_init, seed, q, max_dse_extensions,
                    engine, sw_budget, space_axes, cache, measure,
                    measure_backend, measure_top_k, measure_opts, db_path,
-                   app) -> CodesignReport:
+                   app, checkpoint_dir=None,
+                   resume_from=None) -> CodesignReport:
     from .cost_model import EvalCache
 
     intrinsics = intrinsics or ["GEMM", "GEMV", "DOT", "CONV2D"]
     constraints = constraints or Constraints()
     cache = cache if cache is not None else EvalCache()
 
+    quarantine: set[str] = set()
     if measure:
         from repro.tuner.measure import MeasureOptions
         measure_opts = measure_opts or MeasureOptions(backend=measure_backend)
+        if db_path is not None:
+            from repro.tuner.db import TuningDB
+            quarantine = TuningDB.load(db_path).quarantined_keys()
 
     # Step 1: partition space
     intr_tsts = [ALL_INTRINSICS[i.upper()] for i in intrinsics]
@@ -263,8 +302,41 @@ def _codesign_body(workloads: list[TensorExpr], *, intrinsics, constraints,
     measure_points: list = []   # (workload, rep, MeasureResult) for the DB
     measure_failures: list = []  # failure dicts for the DB's diagnostics
 
+    # periodic checkpoint + resume (DESIGN.md §14): one payload checkpoint
+    # per completed intrinsic; resume restores the newest clean one
+    sig = _codesign_signature(workloads, intrinsics, constraints, target,
+                              n_trials, n_init, seed, q, max_dse_extensions,
+                              engine, sw_budget, space_axes, measure,
+                              measure_backend, measure_top_k)
+    completed: set[str] = set()
+    ckpt = None
+    if checkpoint_dir is not None:
+        from repro.ft import CheckpointManager
+        ckpt = CheckpointManager(checkpoint_dir, keep=8)
+    if resume_from is not None:
+        from repro.ft import CheckpointManager
+        state = CheckpointManager(resume_from, keep=8).restore_payload()
+        if state is None:
+            pass   # nothing restorable: start fresh
+        elif state.get("signature") != sig:
+            warnings.warn("codesign resume: checkpoint signature does not "
+                          "match this invocation; starting fresh",
+                          stacklevel=3)
+        else:
+            completed = set(state["done"])
+            per_intrinsic.update(state["per_intrinsic"])
+            evals = state["evals"]
+            best, best_rank = state["best"], state["best_rank"]
+            measured_summary.update(state["measured_summary"])
+            calib_samples.extend(state["calib_samples"])
+            measure_points.extend(state["measure_points"])
+            measure_failures.extend(state["measure_failures"])
+            cache._data.update(state["cache_data"])
+
     for intrinsic in intrinsics:
         intrinsic = intrinsic.upper()
+        if intrinsic in completed:   # resumed past this one
+            continue
         # the intrinsic must cover every workload of the application
         if not all((w.name, intrinsic) in partition for w in workloads):
             continue
@@ -297,33 +369,49 @@ def _codesign_body(workloads: list[TensorExpr], *, intrinsics, constraints,
 
             if not measure:
                 pick = res.best_under(constraints.as_bounds())
-                if pick is None:
-                    continue
-                hw, y = pick
-                # Step 3: refine the chosen point with the full software budget —
-                # the shared cache makes every Step-2 probe of this point free
-                with obs.span("codesign.refine"):
-                    results = sw_dse.optimize_set(workloads, partition, hw,
-                                                  target=target, seed=seed,
-                                                  budget="full", cache=cache,
-                                                  engine=engine)
-                lat = sw_dse.total_latency(results)
-                sol = Solution(hw, {k: r.schedule for k, r in results.items()},
-                               min(lat, y[0]), y[1], y[2], intrinsic)
-                if best is None or sol.latency_s < best.latency_s:
-                    best = sol
-                continue
+                if pick is not None:
+                    hw, y = pick
+                    # Step 3: refine the chosen point at full software
+                    # budget — the shared cache makes every Step-2 probe
+                    # of this point free
+                    with obs.span("codesign.refine"):
+                        results = sw_dse.optimize_set(
+                            workloads, partition, hw, target=target,
+                            seed=seed, budget="full", cache=cache,
+                            engine=engine)
+                    lat = sw_dse.total_latency(results)
+                    sol = Solution(hw,
+                                   {k: r.schedule for k, r in results.items()},
+                                   min(lat, y[0]), y[1], y[2], intrinsic)
+                    if best is None or sol.latency_s < best.latency_s:
+                        best = sol
+            else:
+                # Step 3 (measured): re-rank the feasible frontier by real
+                # kernels
+                with obs.span("codesign.measure_rerank"):
+                    sol, rank, summary = _measure_rerank(
+                        workloads, partition, res, constraints, intrinsic,
+                        target, seed, cache, measure_opts, measure_top_k,
+                        calib_samples, measure_points, measure_failures,
+                        engine=engine, quarantine=quarantine)
+                if summary:
+                    measured_summary[intrinsic] = summary
+                if sol is not None and (best is None or rank < best_rank):
+                    best, best_rank = sol, rank
 
-            # Step 3 (measured): re-rank the feasible frontier by real kernels
-            with obs.span("codesign.measure_rerank"):
-                sol, rank, summary = _measure_rerank(
-                    workloads, partition, res, constraints, intrinsic, target,
-                    seed, cache, measure_opts, measure_top_k, calib_samples,
-                    measure_points, measure_failures, engine=engine)
-            if summary:
-                measured_summary[intrinsic] = summary
-            if sol is not None and (best is None or rank < best_rank):
-                best, best_rank = sol, rank
+        completed.add(intrinsic)
+        if ckpt is not None:
+            # everything a resumed run needs to continue to a bit-identical
+            # committed solution, pickled atomically per intrinsic round
+            ckpt.save_payload(len(completed), {
+                "signature": sig, "done": sorted(completed),
+                "per_intrinsic": per_intrinsic, "evals": evals,
+                "best": best, "best_rank": best_rank,
+                "measured_summary": measured_summary,
+                "calib_samples": calib_samples,
+                "measure_points": measure_points,
+                "measure_failures": measure_failures,
+                "cache_data": dict(cache._data)})
 
     calibration = None
     saved_db = None
@@ -349,7 +437,8 @@ def _measure_rerank(workloads, partition, res: DSEResult,
                     constraints: Constraints, intrinsic: str, target: str,
                     seed: int, cache, measure_opts, top_k: int,
                     calib_samples: list, measure_points: list,
-                    measure_failures: list, engine: str = "batched"
+                    measure_failures: list, engine: str = "batched",
+                    quarantine: set[str] | None = None
                     ) -> tuple[Solution | None, tuple[int, float] | None,
                                dict]:
     """Measured Step 3 for one intrinsic: refine the top feasible candidates
@@ -370,7 +459,7 @@ def _measure_rerank(workloads, partition, res: DSEResult,
 
     best_sol: Solution | None = None
     best_rank: tuple[int, float] | None = None
-    n_measured = n_fallback = 0
+    n_measured = n_fallback = n_quarantined = 0
     for i in cand_idx:
         hw, y = res.configs[i], res.ys[i]
         results = sw_dse.optimize_set(workloads, partition, hw, target=target,
@@ -383,7 +472,7 @@ def _measure_rerank(workloads, partition, res: DSEResult,
         for w in workloads:
             sched = results[w.name].schedule
             rep = evaluate(w, sched, hw, target, cache=cache)
-            mres = M.measure_one(w, hw, sched, measure_opts)
+            mres = M.measure_one(w, hw, sched, measure_opts, quarantine)
             if mres.ok and rep.legal:
                 total += mres.latency_s
                 n_measured += 1
@@ -392,12 +481,18 @@ def _measure_rerank(workloads, partition, res: DSEResult,
             else:  # no lowering / failed run: analytical latency stands in
                 total += rep.latency_s
                 cand_fallbacks += 1
-                if mres.error:
+                if mres.error_type == "Quarantined":
+                    n_quarantined += 1   # skipped unrun, not a new failure
+                elif mres.error:
                     measure_failures.append({
                         "workload": w.name, "intrinsic": intrinsic,
                         "backend": measure_opts.backend,
                         "error_type": mres.error_type, "error": mres.error,
-                        "elapsed_s": mres.elapsed_s})
+                        "elapsed_s": mres.elapsed_s,
+                        # only retry-exhausted kernel runs carry a point;
+                        # its key is what _persist_tuning quarantines
+                        "key": (M.quarantine_key(mres.point)
+                                if mres.point is not None else "")})
         n_fallback += cand_fallbacks
         # rank lexicographically by (fallback count, total): analytical
         # stand-ins live on a different scale than wall-clock measurements,
@@ -409,7 +504,7 @@ def _measure_rerank(workloads, partition, res: DSEResult,
         if best_rank is None or rank < best_rank:
             best_sol, best_rank = sol, rank
     summary = {"candidates": len(cand_idx), "measured": n_measured,
-               "fallbacks": n_fallback,
+               "fallbacks": n_fallback, "quarantined": n_quarantined,
                "best_measured_total_s":
                    best_sol.latency_s if best_sol else math.inf,
                # True when the committed candidate's total mixes analytical
@@ -438,6 +533,15 @@ def _persist_tuning(db_path, app: str, best: Solution | None, calibration,
                                pt.block_map, mres.latency_s, rep.latency_s,
                                app))
     db.add_failures({**f, "app": app} for f in measure_failures)
+    # retry-exhausted kernel candidates (they carry a quarantine key) join
+    # the persistent quarantine: future runs skip them unrun
+    for f in measure_failures:
+        key = f.get("key", "")
+        if key:
+            db.quarantine_candidate(key, {
+                "app": app, "workload": f.get("workload", ""),
+                "error_type": f.get("error_type", ""),
+                "error": str(f.get("error", ""))[:200]})
     db.set_calibration(calibration)
     if best is not None:
         db.set_app(app, {

@@ -1,7 +1,9 @@
-"""Fault tolerance: atomic/elastic checkpointing, heartbeat watchdog with
-straggler detection, restartable training driver support."""
+"""Fault tolerance (DESIGN.md §14): atomic/elastic checkpointing with
+corrupt-safe restore, heartbeat + no-progress watchdogs, and the seeded
+deterministic fault-injection harness the chaos suite drives."""
 
+from . import inject
 from .checkpoint import CheckpointManager
-from .watchdog import Watchdog
+from .watchdog import ProgressWatchdog, Watchdog
 
-__all__ = ["CheckpointManager", "Watchdog"]
+__all__ = ["CheckpointManager", "ProgressWatchdog", "Watchdog", "inject"]

@@ -1,20 +1,31 @@
-"""Checkpointing for restart + elastic re-meshing.
+"""Checkpointing for restart + elastic re-meshing (DESIGN.md §14).
 
-  * atomic: writes go to ``<dir>/tmp-<step>`` then os.rename to ``step-<n>``
-    — a killed writer never corrupts the latest checkpoint;
+  * atomic: array checkpoints go to ``<dir>/tmp-<step>`` then os.rename to
+    ``step-<n>`` — a killed writer never corrupts the latest checkpoint;
+    manifests and payloads go through ``core/artifacts.py``'s shared
+    atomic writer (tmp file + rename, fault-injectable);
+  * corrupt-safe: a corrupt or partial checkpoint is *skipped with a
+    warning*, never fatal — ``restore``/``restore_payload`` fall back to
+    the newest older checkpoint that loads cleanly, and a failed ``save``
+    warns and keeps the previous checkpoint intact;
   * mesh-agnostic: leaves are stored as host numpy (one .npy per leaf path),
     restore re-shards onto *whatever mesh the new job brings up* via
     NamedSharding — elastic scaling = checkpoint/restore across mesh shapes;
   * async: ``save(..., blocking=False)`` snapshots to host then writes in a
     background thread so the step loop keeps running;
-  * retention: keeps the last ``keep`` checkpoints.
+  * retention: keeps the last ``keep`` checkpoints;
+  * payloads: ``save_payload``/``restore_payload`` checkpoint one pickled
+    Python object per step (``state-<n>.pkl``) — the co-design driver's
+    resume state (MOBO observations, DSE round state, EvalCache contents)
+    rides this path.
 """
 from __future__ import annotations
 
-import json
 import os
+import pickle
 import shutil
 import threading
+import warnings
 from pathlib import Path
 from typing import Any
 
@@ -65,32 +76,90 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, host: dict[str, np.ndarray]) -> None:
+        from repro.core.artifacts import atomic_write_json
+
         tmp = self.dir / f"tmp-{step}"
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        manifest = {}
-        for key, arr in host.items():
-            fname = f"{abs(hash(key)) % 10**12}_{len(manifest)}.npy"
-            np.save(tmp / fname, arr)
-            manifest[key] = {"file": fname, "shape": list(arr.shape),
-                             "dtype": str(arr.dtype)}
-        (tmp / "manifest.json").write_text(json.dumps(
-            {"step": step, "leaves": manifest}))
-        final = self.dir / f"step-{step:012d}"
-        if final.exists():
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        try:
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {}
+            for key, arr in host.items():
+                fname = f"{abs(hash(key)) % 10**12}_{len(manifest)}.npy"
+                np.save(tmp / fname, arr)
+                manifest[key] = {"file": fname, "shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+            atomic_write_json(tmp / "manifest.json",
+                              {"step": step, "leaves": manifest})
+            final = self.dir / f"step-{step:012d}"
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except OSError as e:
+            # a flaky disk must not take down the run: the previous
+            # checkpoint is still intact (nothing was renamed over it)
+            warnings.warn(f"checkpoint step {step} -> {self.dir}: write "
+                          f"failed ({e}); keeping previous checkpoint",
+                          stacklevel=2)
+            shutil.rmtree(tmp, ignore_errors=True)
+            return
         self._gc()
 
     def _gc(self) -> None:
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step-{s:012d}", ignore_errors=True)
+        psteps = sorted(self.payload_steps())
+        for s in psteps[: -self.keep]:
+            (self.dir / f"state-{s:012d}.pkl").unlink(missing_ok=True)
+
+    # -- payload checkpoints (one pickled object per step) ---------------------
+    def save_payload(self, step: int, obj: Any) -> Path | None:
+        """Atomically persist one pickled object as this step's payload
+        checkpoint; warns and returns ``None`` (previous payloads intact)
+        when the write fails."""
+        from repro.core.artifacts import atomic_write_bytes
+
+        path = self.dir / f"state-{step:012d}.pkl"
+        try:
+            atomic_write_bytes(path, pickle.dumps(obj))
+        except (OSError, pickle.PicklingError) as e:
+            warnings.warn(f"payload checkpoint step {step} -> {path}: write "
+                          f"failed ({e}); keeping previous checkpoints",
+                          stacklevel=2)
+            return None
+        self._gc()
+        return path
+
+    def payload_steps(self) -> list[int]:
+        return sorted(int(p.stem.split("-")[1])
+                      for p in self.dir.glob("state-*.pkl"))
+
+    def restore_payload(self, step: int | None = None) -> Any | None:
+        """Unpickle the payload at ``step`` (default: newest).  A corrupt,
+        partial, or unreadable payload is skipped with a warning and the
+        next older one is tried; ``None`` when nothing loads cleanly."""
+        from repro.core.artifacts import read_bytes_safe
+
+        steps = self.payload_steps()
+        if step is not None:
+            steps = [s for s in steps if s <= step]
+        for s in reversed(steps):
+            path = self.dir / f"state-{s:012d}.pkl"
+            raw = read_bytes_safe(path, "payload checkpoint")
+            if raw is None:
+                continue
+            try:
+                return pickle.loads(raw)
+            except Exception as e:  # corrupt pickle: skip, try older
+                warnings.warn(f"payload checkpoint {path}: corrupt ({e}); "
+                              f"skipping", stacklevel=2)
+        return None
 
     # -- restore ---------------------------------------------------------------
     def all_steps(self) -> list[int]:
-        return sorted(int(p.name.split("-")[1]) for p in self.dir.glob("step-*"))
+        return sorted(int(p.name.split("-")[1])
+                      for p in self.dir.glob("step-*"))
 
     def latest_step(self) -> int | None:
         steps = self.all_steps()
@@ -99,9 +168,27 @@ class CheckpointManager:
     def restore(self, step: int, like: Any, mesh=None, specs: Any = None) -> Any:
         """Restore into the structure of ``like``; if (mesh, specs) given,
         leaves are placed as NamedSharding arrays on the *current* mesh —
-        this is the elastic-re-mesh path."""
+        this is the elastic-re-mesh path.
+
+        A corrupt or partial checkpoint at ``step`` is skipped with a
+        warning and the newest older step is tried; ``None`` when no
+        checkpoint restores cleanly (callers start fresh)."""
+        for s in reversed([x for x in self.all_steps() if x <= step]):
+            try:
+                return self._restore_step(s, like, mesh, specs)
+            except Exception as e:   # missing leaves, torn npy, bad manifest
+                warnings.warn(f"checkpoint step {s} in {self.dir}: corrupt "
+                              f"or partial ({e}); skipping", stacklevel=2)
+        return None
+
+    def _restore_step(self, step: int, like: Any, mesh, specs: Any) -> Any:
+        from repro.core.artifacts import read_json_object
+
         d = self.dir / f"step-{step:012d}"
-        manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+        doc = read_json_object(d / "manifest.json", "checkpoint manifest")
+        if not doc:
+            raise ValueError("missing or corrupt manifest")
+        manifest = doc["leaves"]
 
         flat_like, tree = jax.tree_util.tree_flatten_with_path(like)
         flat_specs = (jax.tree_util.tree_leaves(

@@ -1,13 +1,20 @@
-"""Heartbeat watchdog: node-failure and straggler detection.
+"""Watchdogs: heartbeat (node failure / stragglers) and no-progress.
 
-On a real cluster each host runs ``beat()`` per step; the (replicated)
-controller calls ``check()`` to classify workers as healthy / straggler /
-dead and decides mitigation:
+:class:`Watchdog` is the cluster heartbeat: on a real cluster each host
+runs ``beat()`` per step; the (replicated) controller calls ``check()`` to
+classify workers as healthy / straggler / dead and decides mitigation:
 
   * dead worker        -> restart from the latest checkpoint, possibly on a
                           smaller mesh (elastic: CheckpointManager reshards);
   * straggler          -> first re-dispatch its shard (backup-task policy);
                           repeated offenders are cordoned.
+
+:class:`ProgressWatchdog` is the single-process complement (DESIGN.md §14):
+a step-counted stall detector the serving engines feed a *progress
+signature* every tick.  When the signature stops changing for
+``stall_limit`` consecutive beats, the engine converts its would-be
+infinite ``run()`` loop into a diagnosable fail-stop instead of a hang —
+the chaos suite's "no schedule hangs" guarantee.
 
 The control logic is deterministic and fully unit-tested; the container has
 one host, so launch/train.py exercises it with simulated failures
@@ -17,6 +24,36 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+
+
+@dataclass
+class ProgressWatchdog:
+    """Fail-stop guard over a monotone progress signature.
+
+    ``beat(signature)`` returns the number of consecutive beats the
+    signature has been unchanged; :attr:`stalled` trips at
+    ``stall_limit``.  The signature should capture *real* forward progress
+    (tokens produced, requests reaching a terminal state) — deliberately
+    NOT churn like preemption counts, which increment forever in exactly
+    the livelocks this guard exists to catch (the PR-7 commit-pressure
+    livelock spun on preempt/requeue with the whole pool free).
+    """
+
+    stall_limit: int = 256
+    stalled_for: int = 0
+    _last: object = None
+
+    def beat(self, signature: object) -> int:
+        if signature != self._last:
+            self._last = signature
+            self.stalled_for = 0
+        else:
+            self.stalled_for += 1
+        return self.stalled_for
+
+    @property
+    def stalled(self) -> bool:
+        return self.stalled_for >= self.stall_limit
 
 
 @dataclass

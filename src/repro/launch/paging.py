@@ -22,6 +22,7 @@ import itertools
 from typing import TYPE_CHECKING
 
 from repro import obs
+from repro.ft import inject
 
 if TYPE_CHECKING:  # pragma: no cover - type-only import
     from repro.launch.serve import Request
@@ -59,6 +60,10 @@ class PageAllocator:
     def alloc(self, n: int) -> list[int]:
         if n < 0:
             raise ValueError("cannot allocate a negative page count")
+        # fault-injection site (DESIGN.md §14): fires BEFORE any free-list
+        # mutation, so an injected MemoryError is indistinguishable from a
+        # genuine exhaustion and leaves the pool consistent
+        inject.check("page.alloc", MemoryError)
         if n > len(self._free):
             raise MemoryError(
                 f"allocation of {n} pages exceeds {len(self._free)} free")
@@ -172,6 +177,20 @@ class PriorityScheduler:
             return None
         return min(heads, key=lambda r: (self.effective_priority(r),
                                          r.submit_seq))
+
+    def waiting(self) -> list["Request"]:
+        """Every waiting request, across all class queues (queue order
+        within a class; no cross-class ordering implied)."""
+        return [r for q in self.queues.values() for r in q]
+
+    def remove(self, req: "Request") -> bool:
+        """Pull a waiting request out of its class queue (cancellation /
+        deadline expiry); False if it was not waiting."""
+        q = self.queues.get(req.priority)
+        if q is not None and req in q:
+            q.remove(req)
+            return True
+        return False
 
     # -- slots ------------------------------------------------------------
 

@@ -38,10 +38,26 @@ import numpy as np
 
 from repro import obs
 from repro.configs import ARCH_IDS, get_config
+from repro.ft import ProgressWatchdog, inject
+from repro.ft.inject import InjectedFault
 from repro.launch.mesh import make_host_mesh
 from repro.launch.paging import PageAllocator, PriorityScheduler
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import family_module, reduced
+
+#: Terminal request statuses (DESIGN.md §14).  Every submitted request ends
+#: in exactly one of these; ``PENDING`` is the only non-terminal state.
+TERMINAL_STATUSES = ("OK", "CANCELLED", "EXPIRED", "REJECTED", "FAILED")
+
+
+class EngineStalledError(RuntimeError):
+    """``run()`` made no progress for ``stall_limit`` consecutive engine
+    steps — fail-stop with a diagnosable snapshot instead of an infinite
+    loop (``.diagnostics`` holds queue/slot/page state at the stall)."""
+
+    def __init__(self, msg: str, diagnostics: dict | None = None):
+        super().__init__(msg)
+        self.diagnostics = diagnostics or {}
 
 
 @dataclasses.dataclass
@@ -50,17 +66,23 @@ class Request:
     dynamically attached attribute): −1 until prefill seeds it, then always
     the token the next decode step consumes.  ``priority`` is a small
     non-negative int, 0 = most urgent (paged engine only; the FCFS engine
-    ignores it)."""
+    ignores it).  ``deadline_s`` is an optional relative deadline (seconds
+    from engine submit); the engine stamps ``deadline_at`` and enforces it
+    at admission and per step.  ``status`` is ``PENDING`` until the request
+    reaches exactly one terminal status (:data:`TERMINAL_STATUSES`)."""
 
     rid: int
     prompt: np.ndarray
     max_new: int
     max_seq: int | None = None     # per-request context budget (rows of KV)
     priority: int = 0
+    deadline_s: float | None = None    # relative deadline, stamped at submit
     next_token: int = -1
     out: list[int] = dataclasses.field(default_factory=list)
     submit_seq: int = -1           # stamped by the scheduler at submit
     preemptions: int = 0
+    status: str = "PENDING"
+    deadline_at: float | None = None   # absolute, on the engine's clock
     submit_time: float | None = None
     admit_time: float | None = None    # first slot placement (queue exit)
     first_token_time: float | None = None
@@ -133,6 +155,9 @@ def _obs_first_token(req: Request) -> None:
 
 
 def _obs_finish(req: Request) -> None:
+    if req.status != "PENDING":   # terminal transition is exactly-once
+        return
+    req.status = "OK"
     req.finish_time = time.time()
     st = obs.state()
     if st is not None:
@@ -142,6 +167,25 @@ def _obs_finish(req: Request) -> None:
         if req.submit_time is not None:
             st.metrics.histogram("serve.e2e_s").observe(
                 req.finish_time - req.submit_time)
+
+
+def _obs_degrade(req: Request, status: str, detail: str = "") -> bool:
+    """Exactly-once degraded terminal transition (CANCELLED / EXPIRED /
+    REJECTED / FAILED); False (and no telemetry) if ``req`` is already
+    terminal — the guarantee the chaos suite asserts per request."""
+    if req.status != "PENDING":
+        return False
+    assert status in TERMINAL_STATUSES and status != "OK", status
+    req.status = status
+    req.finish_time = time.time()
+    st = obs.state()
+    if st is not None:
+        args = {"rid": req.rid, "status": status}
+        if detail:
+            args["detail"] = detail
+        st.tracer.instant("req.degrade", args)
+        st.metrics.counter(f"serve.requests_{status.lower()}").inc()
+    return True
 
 
 class FCFSScheduler:
@@ -175,6 +219,17 @@ class FCFSScheduler:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def waiting(self) -> list[Request]:
+        return list(self.queue)
+
+    def remove(self, req: Request) -> bool:
+        """Pull a waiting request out of the queue (cancellation / deadline
+        expiry); False if it was not waiting."""
+        if req in self.queue:
+            self.queue.remove(req)
+            return True
+        return False
 
     def admit(self) -> list[tuple[int, Request]]:
         """Assign queued requests to free slots, FCFS, up to the
@@ -232,7 +287,8 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 64,
                  tp: int = 1, impl: str = "xla",
-                 max_concurrency: int | None = None):
+                 max_concurrency: int | None = None,
+                 clock=time.monotonic, stall_limit: int = 256):
         if cfg.embed_inputs:
             raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
                              f"(DESIGN.md §5)")
@@ -244,6 +300,9 @@ class ServeEngine:
             cfg, tp, impl, max_seq)
         self.cache = self.mod.init_cache(cfg, slots, max_seq, tp)
         self.pos = np.zeros(slots, np.int64)   # per-slot next write position
+        self.clock = clock
+        self.stall_limit = stall_limit
+        self.terminal: list[Request] = []   # degraded terminals, undrained
         self.decode_steps = 0
         self.prefill_tokens = 0
         self.generated = 0
@@ -253,13 +312,55 @@ class ServeEngine:
     def _budget(self, req: Request) -> int:
         return min(self.max_seq, req.max_seq or self.max_seq)
 
-    def submit(self, req: Request) -> None:
-        if len(req.prompt) >= self._budget(req):
-            raise ValueError(
-                f"request {req.rid}: prompt ({len(req.prompt)} tokens) must "
-                f"leave room under its context budget {self._budget(req)}")
+    def submit(self, req: Request) -> bool:
+        """Queue ``req``; False when it can never be served (status becomes
+        REJECTED and it is reported through ``run()`` like any terminal)."""
         _obs_submit(req)
+        if len(req.prompt) >= self._budget(req):
+            self._finish_terminal(req, "REJECTED", f"prompt "
+                                  f"({len(req.prompt)} tokens) must leave "
+                                  f"room under its context budget "
+                                  f"{self._budget(req)}")
+            return False
+        if req.deadline_s is not None:
+            req.deadline_at = self.clock() + req.deadline_s
         self.scheduler.submit(req)
+        return True
+
+    # -- graceful degradation (DESIGN.md §14) ------------------------------
+
+    def _finish_terminal(self, req: Request, status: str,
+                         detail: str = "") -> None:
+        _obs_degrade(req, status, detail)
+        self.terminal.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a waiting or active request; False if ``rid`` is unknown
+        or already terminal.  The slot (if any) frees immediately."""
+        for req in self.scheduler.waiting():
+            if req.rid == rid:
+                self.scheduler.remove(req)
+                self._finish_terminal(req, "CANCELLED")
+                return True
+        for slot, req in list(self.scheduler.active.items()):
+            if req.rid == rid:
+                self.scheduler.retire(slot)
+                self._finish_terminal(req, "CANCELLED")
+                return True
+        return False
+
+    def _purge_expired(self) -> None:
+        """Drop every request past its deadline — waiting or active — at
+        the top of each step (admission control + per-step enforcement)."""
+        now = self.clock()
+        for req in self.scheduler.waiting():
+            if req.deadline_at is not None and now >= req.deadline_at:
+                self.scheduler.remove(req)
+                self._finish_terminal(req, "EXPIRED")
+        for slot, req in list(self.scheduler.active.items()):
+            if req.deadline_at is not None and now >= req.deadline_at:
+                self.scheduler.retire(slot)
+                self._finish_terminal(req, "EXPIRED")
 
     # -- the serving loop --------------------------------------------------
 
@@ -296,6 +397,7 @@ class ServeEngine:
     def step(self) -> list[Request]:
         """Admit what fits, then run one batched decode step over every
         active slot.  Returns the requests that finished this step."""
+        self._purge_expired()
         finished = self._admit()
         active = self.scheduler.active
         if not active:
@@ -327,10 +429,28 @@ class ServeEngine:
         return finished
 
     def run(self) -> list[Request]:
-        """Serve until queue and slots drain; requests in rid order."""
+        """Serve until queue and slots drain.  Returns every submitted
+        request in rid order — finished (status OK) and degraded terminals
+        alike.  A no-progress stall raises :class:`EngineStalledError`
+        instead of looping forever."""
         done: list[Request] = []
+        dog = ProgressWatchdog(self.stall_limit)
         while self.scheduler.has_work():
             done.extend(self.step())
+            dog.beat((self.generated, self.prefill_tokens,
+                      len(done) + len(self.terminal)))
+            if dog.stalled:
+                raise EngineStalledError(
+                    f"no progress in {self.stall_limit} engine steps",
+                    diagnostics={
+                        "stall_limit": self.stall_limit,
+                        "waiting": [r.rid for r in self.scheduler.waiting()],
+                        "active": {s: r.rid for s, r in
+                                   self.scheduler.active.items()},
+                        "generated": self.generated,
+                    })
+        done.extend(self.terminal)
+        self.terminal = []
         return sorted(done, key=lambda r: r.rid)
 
 
@@ -388,7 +508,8 @@ class PagedServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 64,
                  page_size: int = 8, n_pages: int | None = None,
                  prefill_chunk: int = 16, tp: int = 1, impl: str = "xla",
-                 max_concurrency: int | None = None, age_steps: int = 32):
+                 max_concurrency: int | None = None, age_steps: int = 32,
+                 clock=time.monotonic, stall_limit: int = 256):
         if cfg.embed_inputs:
             raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
                              f"(DESIGN.md §5)")
@@ -413,6 +534,9 @@ class PagedServeEngine:
         self._pages: list[list[int]] = [[] for _ in range(slots)]
         self._prefills: dict[int, _Prefill] = {}
         self._suspended: dict[int, tuple[int, object]] = {}   # rid -> swap
+        self.clock = clock
+        self.stall_limit = stall_limit
+        self.terminal: list[Request] = []   # degraded terminals, undrained
         self.decode_steps = 0
         self.prefill_tokens = 0
         self.generated = 0
@@ -423,21 +547,77 @@ class PagedServeEngine:
     def _budget(self, req: Request) -> int:
         return min(self.max_seq, req.max_seq or self.max_seq)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Queue ``req``; False when it can never be served (status becomes
+        REJECTED and it is reported through ``run()`` like any terminal)."""
+        _obs_submit(req)
         if len(req.prompt) >= self._budget(req):
-            raise ValueError(
-                f"request {req.rid}: prompt ({len(req.prompt)} tokens) must "
-                f"leave room under its context budget {self._budget(req)}")
+            self._finish_terminal(req, "REJECTED", f"prompt "
+                                  f"({len(req.prompt)} tokens) must leave "
+                                  f"room under its context budget "
+                                  f"{self._budget(req)}")
+            return False
         if self._has_pool:
             # a request admitted alone must always fit: its peak row count
             # is bounded by both its budget and prompt + max_new - 1
             peak = min(len(req.prompt) + req.max_new - 1, self._budget(req))
             if self.alloc.pages_for(peak) > self.alloc.n_pages:
-                raise ValueError(
-                    f"request {req.rid}: needs {self.alloc.pages_for(peak)} "
-                    f"pages at peak, pool only has {self.alloc.n_pages}")
-        _obs_submit(req)
+                self._finish_terminal(
+                    req, "REJECTED",
+                    f"needs {self.alloc.pages_for(peak)} pages at peak, "
+                    f"pool only has {self.alloc.n_pages}")
+                return False
+        if req.deadline_s is not None:
+            req.deadline_at = self.clock() + req.deadline_s
         self.scheduler.submit(req)
+        return True
+
+    # -- graceful degradation (DESIGN.md §14) ------------------------------
+
+    def _finish_terminal(self, req: Request, status: str,
+                         detail: str = "") -> None:
+        _obs_degrade(req, status, detail)
+        self.terminal.append(req)
+
+    def _drop_slot(self, slot: int) -> Request:
+        """Tear down an active slot without completing its request: the
+        in-flight prefill (if any) is discarded and every page returns to
+        the pool — the leak-free guarantee the chaos suite asserts."""
+        req = self.scheduler.retire(slot)
+        self._prefills.pop(slot, None)
+        self._release(slot)
+        return req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a waiting, suspended, or active request; False if ``rid``
+        is unknown or already terminal.  Pages free immediately."""
+        for req in self.scheduler.waiting():
+            if req.rid == rid:
+                self.scheduler.remove(req)
+                self._suspended.pop(rid, None)   # swapped-out snapshot
+                self._finish_terminal(req, "CANCELLED")
+                return True
+        for slot, req in list(self.scheduler.active.items()):
+            if req.rid == rid:
+                self._drop_slot(slot)
+                self._finish_terminal(req, "CANCELLED")
+                return True
+        return False
+
+    def _purge_expired(self) -> None:
+        """Drop every request past its deadline — waiting, suspended, or
+        active — at the top of each step (admission control + per-step
+        enforcement)."""
+        now = self.clock()
+        for req in self.scheduler.waiting():
+            if req.deadline_at is not None and now >= req.deadline_at:
+                self.scheduler.remove(req)
+                self._suspended.pop(req.rid, None)
+                self._finish_terminal(req, "EXPIRED")
+        for slot, req in list(self.scheduler.active.items()):
+            if req.deadline_at is not None and now >= req.deadline_at:
+                self._drop_slot(slot)
+                self._finish_terminal(req, "EXPIRED")
 
     # -- paging ------------------------------------------------------------
 
@@ -492,7 +672,14 @@ class PagedServeEngine:
             if self.alloc.n_free < 1 and not self._reclaim(1, slot):
                 self._preempt(slot)
                 return False
-            self._map_pages(slot, self.alloc.alloc(1))
+            try:
+                pages = self.alloc.alloc(1)
+            except MemoryError:
+                # injected (or genuine) allocation failure degrades exactly
+                # like page pressure: swap out bit-exactly, retry later
+                self._preempt(slot)
+                return False
+            self._map_pages(slot, pages)
         return True
 
     # -- preemption: swap-out / swap-in (bit-exact, no recompute) ----------
@@ -525,12 +712,16 @@ class PagedServeEngine:
             rows, jax.tree_util.tree_map(grab, self.cache, self._axes))
 
     def _swap_in(self, slot: int, req: Request) -> None:
-        rows, snap = self._suspended.pop(req.rid)
+        rows, snap = self._suspended[req.rid]
         prows = jnp.zeros((0,), jnp.int32)
         if self._has_pool:
+            # allocate BEFORE dropping the host snapshot: an (injected)
+            # MemoryError here leaves the suspension intact, so the caller
+            # can requeue the request without losing its state
             self._map_pages(slot, self.alloc.alloc(
                 self.alloc.pages_for(rows)))
             prows = jnp.asarray(self.row_map[slot, :rows])
+        del self._suspended[req.rid]
 
         def put(c, s, ax):
             if ax == "pool":
@@ -567,7 +758,19 @@ class PagedServeEngine:
                 return
             if self.scheduler.free_slot() is not None \
                     and self.alloc.n_free >= self._need_pages(req):
-                self._start(self.scheduler.place(req), req)
+                slot = self.scheduler.place(req)
+                try:
+                    self._start(slot, req)
+                except MemoryError:
+                    # injected page fault while re-admitting: undo the
+                    # placement and yield to the next step — retrying
+                    # inside this tick could livelock on a rate-based
+                    # fault schedule
+                    self._release(slot)
+                    self._prefills.pop(slot, None)
+                    self.scheduler.preempt(slot)
+                    self.preemptions += 1
+                    return
                 continue
             victim = self.scheduler.least_deserving()
             if victim is None or self.scheduler.admit_key(victim)[0] <= \
@@ -581,6 +784,15 @@ class PagedServeEngine:
         for slot in sorted(self._prefills):
             pf = self._prefills[slot]
             req = pf.req
+            try:
+                inject.check("serve.prefill")
+            except InjectedFault as e:
+                # fail-stop for this request alone: the private prefill
+                # cache is discarded and the slot torn down, so by the
+                # per-slot position contract survivors are bit-identical
+                self._drop_slot(slot)
+                self._finish_terminal(req, "FAILED", str(e))
+                continue
             chunk = min(self.prefill_chunk, len(req.prompt) - pf.done)
             toks = jnp.asarray(req.prompt[None, pf.done:pf.done + chunk])
             with obs.span("serve.prefill_chunk"):
@@ -615,18 +827,27 @@ class PagedServeEngine:
         the prefill reruns.
         """
         n = len(req.prompt)
-        need = self.alloc.pages_for(n) if self._has_pool else 0
-        if req.max_new > 1 and self.alloc.n_free < need \
-                and not self._reclaim(need, slot):
-            self._release(slot)
-            self.scheduler.preempt(slot)
-            self.preemptions += 1
-            st = obs.state()
-            if st is not None:
-                st.tracer.instant("req.preempt", {"rid": req.rid,
-                                                  "slot": slot})
-                st.metrics.counter("serve.preemptions").inc()
-            return
+        # max_new == 1 finishes at commit and never touches the pool
+        need = (self.alloc.pages_for(n)
+                if self._has_pool and req.max_new > 1 else 0)
+        pages: list[int] = []
+        if need:
+            ok = self.alloc.n_free >= need or self._reclaim(need, slot)
+            if ok:
+                try:
+                    pages = self.alloc.alloc(need)
+                except MemoryError:   # injected: degrade like pressure
+                    ok = False
+            if not ok:
+                self._release(slot)
+                self.scheduler.preempt(slot)
+                self.preemptions += 1
+                st = obs.state()
+                if st is not None:
+                    st.tracer.instant("req.preempt", {"rid": req.rid,
+                                                      "slot": slot})
+                    st.metrics.counter("serve.preemptions").inc()
+                return
         tok = int(jnp.argmax(logits[0, -1]))
         req.next_token = tok
         req.out.append(tok)
@@ -637,8 +858,8 @@ class PagedServeEngine:
             finished.append(self.scheduler.retire(slot))
             self.pos[slot] = self.max_seq
             return
-        if need:
-            self._map_pages(slot, self.alloc.alloc(need))
+        if pages:
+            self._map_pages(slot, pages)
         prows = jnp.asarray(self.row_map[slot, :n].clip(min=0)
                             if self._has_pool else np.zeros(0, np.int32))
         packed = self.mod.pack_paged_slot(self.cfg, pcache, self.max_seq, n)
@@ -649,6 +870,9 @@ class PagedServeEngine:
     def _decode_tick(self, finished: list[Request]) -> None:
         """One batched decode step over every committed slot, after mapping
         (or reclaiming) the pages under each slot's next write row."""
+        # injection site FIRST — nothing is mutated yet, so step() can drop
+        # the whole tick as a transient and retry next step
+        inject.check("serve.decode")
         order = sorted((s for s in self.scheduler.active
                         if s not in self._prefills),
                        key=self.scheduler.admit_key)
@@ -692,12 +916,22 @@ class PagedServeEngine:
         self.scheduler.tick()
         finished: list[Request] = []
         with obs.span("serve.step"):
+            self._purge_expired()
             with obs.span("serve.admit"):
                 self._admit_new()
             with obs.span("serve.prefill_tick"):
                 self._prefill_tick(finished)
             with obs.span("serve.decode_tick"):
-                self._decode_tick(finished)
+                try:
+                    self._decode_tick(finished)
+                except InjectedFault:
+                    # transient tick fault: the injection site is the
+                    # tick's first statement, so nothing was mutated —
+                    # drop the tick; a persistent schedule turns into a
+                    # stall, which run()'s watchdog converts to fail-stop
+                    st = obs.state()
+                    if st is not None:
+                        st.metrics.counter("serve.tick_faults").inc()
         st = obs.state()
         if st is not None:
             m = st.metrics
@@ -707,9 +941,35 @@ class PagedServeEngine:
         return finished
 
     def run(self) -> list[Request]:
+        """Serve until queue and slots drain.  Returns every submitted
+        request in rid order — finished (status OK) and degraded terminals
+        alike.  A no-progress stall (e.g. a persistent fault schedule, or
+        the preemption livelock §12 guards against) raises
+        :class:`EngineStalledError` instead of looping forever."""
         done: list[Request] = []
+        dog = ProgressWatchdog(self.stall_limit)
         while self.scheduler.has_work():
             done.extend(self.step())
+            # progress = tokens moved or a request reaching a terminal
+            # status; preemption counts are deliberately excluded (they
+            # keep incrementing during a livelock)
+            dog.beat((self.generated, self.prefill_tokens,
+                      len(done) + len(self.terminal)))
+            if dog.stalled:
+                raise EngineStalledError(
+                    f"no progress in {self.stall_limit} engine steps",
+                    diagnostics={
+                        "stall_limit": self.stall_limit,
+                        "waiting": [r.rid for r in self.scheduler.waiting()],
+                        "active": {s: r.rid for s, r in
+                                   self.scheduler.active.items()},
+                        "prefills": sorted(self._prefills),
+                        "suspended": sorted(self._suspended),
+                        "pages_free": self.alloc.n_free,
+                        "preemptions": self.preemptions,
+                    })
+        done.extend(self.terminal)
+        self.terminal = []
         return sorted(done, key=lambda r: r.rid)
 
 
@@ -755,29 +1015,36 @@ def serve_requests(cfg, params, requests, *, slots: int = 4,
                    max_seq: int = 64, tp: int = 1, impl: str = "xla",
                    max_concurrency: int | None = None, paged: bool = False,
                    page_size: int = 8, n_pages: int | None = None,
-                   prefill_chunk: int = 16, age_steps: int = 32
+                   prefill_chunk: int = 16, age_steps: int = 32,
+                   stall_limit: int = 256
                    ) -> tuple[list[Request], dict]:
     """Convenience wrapper: submit ``requests``, drain the engine, return
-    ``(finished_requests, stats)``.  ``max_concurrency=1`` is the sequential
-    one-request-at-a-time baseline (identical math and shapes, no batching
-    across requests); ``paged=True`` runs the page-table engine of
-    DESIGN.md §12 instead of the slot-pinned one."""
+    ``(requests, stats)`` — every submitted request comes back with a
+    terminal ``status`` (OK / CANCELLED / EXPIRED / REJECTED / FAILED),
+    counted exactly once in ``stats["status_counts"]``.
+    ``max_concurrency=1`` is the sequential one-request-at-a-time baseline
+    (identical math and shapes, no batching across requests); ``paged=True``
+    runs the page-table engine of DESIGN.md §12 instead of the slot-pinned
+    one."""
     if paged:
         eng = PagedServeEngine(
             cfg, params, slots=slots, max_seq=max_seq, tp=tp, impl=impl,
             max_concurrency=max_concurrency, page_size=page_size,
             n_pages=n_pages, prefill_chunk=prefill_chunk,
-            age_steps=age_steps)
+            age_steps=age_steps, stall_limit=stall_limit)
     else:
         eng = ServeEngine(cfg, params, slots=slots, max_seq=max_seq, tp=tp,
-                          impl=impl, max_concurrency=max_concurrency)
+                          impl=impl, max_concurrency=max_concurrency,
+                          stall_limit=stall_limit)
     for req in requests:
         eng.submit(req)
     done = eng.run()
+    status_counts = collections.Counter(r.status for r in done)
     return done, {"decode_steps": eng.decode_steps,
                   "prefill_tokens": eng.prefill_tokens,
                   "generated": eng.generated,
                   "preemptions": getattr(eng, "preemptions", 0),
+                  "status_counts": dict(sorted(status_counts.items())),
                   **_latency_summary(done)}
 
 
@@ -828,6 +1095,22 @@ def main() -> None:
     ap.add_argument("--long-every", type=int, default=0,
                     help="every k-th request gets a long prompt (mixed "
                          "traffic; 0 = homogeneous)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request relative deadline in seconds; "
+                         "overdue requests expire gracefully")
+    ap.add_argument("--stall-limit", type=int, default=256,
+                    help="engine steps without progress before fail-stop")
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="SITE=RATE",
+                    help="arm a fault-injection site at a seeded failure "
+                         "rate, e.g. page.alloc=0.05 (repeatable; "
+                         "DESIGN.md §14)")
+    ap.add_argument("--inject-at", action="append", default=[],
+                    metavar="SITE=I,J",
+                    help="inject at exact call indices of a site, e.g. "
+                         "serve.decode=3,7 (repeatable)")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for the fault-injection schedules")
     ap.add_argument("--tuning-db", default=None,
                     help="tuning database (tuner/db.py); defaults to "
                          "artifacts/tuning_db.json")
@@ -846,6 +1129,16 @@ def main() -> None:
 
     if args.trace:
         obs.enable()
+    if args.inject or args.inject_at:
+        rates = {}
+        for spec in args.inject:
+            site, _, rate = spec.partition("=")
+            rates[site] = float(rate) if rate else 1.0
+        at = {}
+        for spec in args.inject_at:
+            site, _, idxs = spec.partition("=")
+            at[site] = [int(x) for x in idxs.split(",") if x]
+        inject.arm(seed=args.inject_seed, rates=rates, at=at)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -865,20 +1158,30 @@ def main() -> None:
     params = mod.init(cfg, jax.random.PRNGKey(args.seed), tp=1)
     requests = make_requests(cfg, args.requests, args.max_new, args.seed,
                              long_every=args.long_every)
+    if args.deadline_s is not None:
+        for req in requests:
+            req.deadline_s = args.deadline_s
 
     t0 = time.time()
     done, stats = serve_requests(
         cfg, params, requests, slots=args.slots, max_seq=args.max_seq,
         max_concurrency=1 if args.sequential else None, paged=args.paged,
         page_size=args.page_size, n_pages=args.pages,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk, stall_limit=args.stall_limit)
     dt = time.time() - t0
     for req in done:
-        print(f"req {req.rid}: prompt[{len(req.prompt)}] -> {req.out}")
+        tail = "" if req.status == "OK" else f"  [{req.status}]"
+        print(f"req {req.rid}: prompt[{len(req.prompt)}] -> "
+              f"{req.out}{tail}")
     print(f"{len(done)} requests, {stats['generated']} tokens in "
           f"{stats['decode_steps']} decode steps "
           f"({stats['preemptions']} preemptions), "
           f"{stats['generated'] / dt:.1f} tok/s")
+    print("status: " + ", ".join(f"{k}={v}" for k, v in
+                                 stats["status_counts"].items()))
+    plan = inject.plan()
+    if plan is not None:
+        print(f"fault injection: {plan.summary()}")
     ttft = stats["ttft_s"]
     if ttft["count"]:
         print(f"ttft p50={ttft['p50']:.4f}s p95={ttft['p95']:.4f}s "

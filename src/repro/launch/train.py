@@ -92,10 +92,12 @@ def main() -> None:
     ckpt = CheckpointManager(Path(args.checkpoint_dir) / cfg.name)
     start = 0
     latest = ckpt.latest_step()
+    state = None
     if latest is not None:
         state = ckpt.restore(latest, like=_eval_state(mod, cfg, opt, key, tp),
                              mesh=mesh, specs=(mod.specs(cfg),
                                                opt.init_specs(mod.specs(cfg))))
+    if state is not None:
         params, opt_state = state
         start = latest + 1
         print(f"resumed from checkpoint step {latest}")

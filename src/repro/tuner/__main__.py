@@ -83,6 +83,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--solutions", type=Path, default=None,
                     help="also save the full solution (schedules included) "
                          "to this registry path")
+    ap.add_argument("--checkpoint-dir", type=Path, default=None,
+                    help="checkpoint the co-design round state here after "
+                         "every intrinsic (DESIGN.md §14)")
+    ap.add_argument("--resume", type=Path, default=None,
+                    help="resume from the newest clean checkpoint in this "
+                         "directory (bit-identical committed solution)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny GEMM preset; exit non-zero unless a "
                          "calibrated model is produced (CI gate)")
@@ -108,7 +114,8 @@ def main(argv: list[str] | None = None) -> int:
         seed=args.seed, sw_budget=args.sw_budget, measure=args.measure,
         measure_backend=args.backend, measure_top_k=args.top_k,
         measure_opts=opts, db_path=args.db if args.measure else None,
-        app=args.app)
+        app=args.app, checkpoint_dir=args.checkpoint_dir,
+        resume_from=args.resume)
 
     if report.solution is None:
         print("no feasible solution under the constraints")
@@ -117,9 +124,11 @@ def main(argv: list[str] | None = None) -> int:
     for intr, s in (report.measured or {}).items():
         mixed = " [MIXED: total contains analytical stand-ins]" \
             if s.get("best_has_fallbacks") else ""
+        quarantined = s.get("quarantined", 0)
+        qnote = f", {quarantined} quarantined skipped" if quarantined else ""
         print(f"  {intr}: measured {s['measured']} kernel points over "
               f"{s['candidates']} candidates ({s['fallbacks']} analytical "
-              f"fallbacks), best total "
+              f"fallbacks{qnote}), best total "
               f"{s['best_measured_total_s'] * 1e3:.3f} ms{mixed}")
     if report.calibration is not None:
         for op, corr in report.calibration.corrections.items():

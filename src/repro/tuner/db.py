@@ -11,7 +11,10 @@ co-design/tuning run:
     (``tuner/calibrate.py``), so later explorations can start calibrated;
   * ``apps`` — per-application co-design solutions (accelerator config +
     intrinsic + objectives), subsuming the older ``core/solution.py``
-    registry format.
+    registry format;
+  * ``failures`` / ``quarantine`` — bounded diagnostic failure records, and
+    the persistently-failing kernel candidates future measurement runs skip
+    unrun (DESIGN.md §14).
 
 Robustness contract (shared with the hardened solution registry): corrupt or
 missing files load as an empty database with a warning — a bad artifact must
@@ -86,6 +89,9 @@ class TuningDB:
         self.calibration = Calibration()
         self.apps: dict[str, dict] = {}
         self.failures: list[dict] = []
+        # persistently failing kernel candidates (measure.quarantine_key ->
+        # diagnostic info); future measurement runs skip these unrun
+        self.quarantine: dict[str, dict] = {}
 
     # -- loading --------------------------------------------------------------
     @classmethod
@@ -138,6 +144,12 @@ class TuningDB:
             warnings.warn(f"tuning db {self.path}: ignoring 'failures' "
                           f"section of type {type(fails).__name__}",
                           stacklevel=4)
+        for key, info in section("quarantine").items():
+            if not isinstance(info, dict):
+                warnings.warn(f"tuning db {self.path}: dropping malformed "
+                              f"quarantine entry {key!r}", stacklevel=3)
+                continue
+            self.quarantine.setdefault(str(key), info)
 
     def _merge_record(self, rec: TuningRecord) -> None:
         cur = self.records.get(rec.key)
@@ -175,6 +187,18 @@ class TuningDB:
                 out.append(f)
         self.failures = out[-MAX_FAILURES:]
 
+    def quarantine_candidate(self, key: str, info: dict | None = None) -> bool:
+        """Quarantine one kernel candidate (``measure.quarantine_key``
+        string): future measurement runs skip it without burning wall
+        clock.  -> whether the key was newly quarantined."""
+        if key in self.quarantine:
+            return False
+        self.quarantine[key] = dict(info or {})
+        return True
+
+    def quarantined_keys(self) -> set[str]:
+        return set(self.quarantine)
+
     # -- lookups --------------------------------------------------------------
     def best_config(self, op: str, shape, dtype: str = "float32",
                     backend: str = "interpret") -> dict[str, int] | None:
@@ -198,6 +222,8 @@ class TuningDB:
         }
         if self.failures:   # optional section: old artifacts stay byte-stable
             out["failures"] = list(self.failures)
+        if self.quarantine:   # optional, same byte-stability contract
+            out["quarantine"] = dict(sorted(self.quarantine.items()))
         return out
 
     def save(self, path: Path | str | None = None) -> Path:
@@ -220,6 +246,8 @@ class TuningDB:
                 self.calibration.corrections))
             merged.apps = dict(self.apps)
             merged.failures = [dict(f) for f in self.failures]
+            merged.quarantine = {k: dict(v)
+                                 for k, v in self.quarantine.items()}
             merged._absorb(on_disk)
             # our freshly-set apps/calibration win over stale on-disk ones
             merged.apps.update(self.apps)

@@ -23,7 +23,10 @@ resource envelope):
 Failures (unloweable workload, shape/compile errors, kernel crashes) are
 *captured*: a failed candidate yields ``MeasureResult(latency_s=inf,
 error=...)`` instead of aborting the whole population — invalid points are
-data for the explorer, not exceptions.
+data for the explorer, not exceptions.  Robustness (DESIGN.md §14): kernel
+*timing* failures — transient by nature, unlike structural lowering errors —
+are retried with capped exponential backoff, and candidates quarantined by
+the tuning DB's failure history are skipped without burning wall clock.
 """
 from __future__ import annotations
 
@@ -38,6 +41,7 @@ from repro import obs
 from repro.core.hw_primitives import HWConfig
 from repro.core.sw_primitives import Schedule
 from repro.core.tst import TensorExpr
+from repro.ft import inject
 
 KERNEL_OPS = ("gemm", "gemv", "dot", "conv2d")
 
@@ -56,6 +60,15 @@ class KernelPoint:
     @property
     def block_map(self) -> dict[str, int]:
         return dict(self.blocks)
+
+
+def quarantine_key(point: KernelPoint) -> str:
+    """Stable identity of a concrete kernel invocation for the tuning DB's
+    quarantine section: the DB record key plus the block shapes (a candidate
+    is quarantined per block config, not per problem shape)."""
+    blocks = ",".join(f"{k}={v}" for k, v in point.blocks)
+    return "|".join([point.op, "x".join(str(v) for v in point.shape),
+                     point.dtype, point.backend, blocks])
 
 
 @dataclass(frozen=True)
@@ -89,6 +102,11 @@ class MeasureOptions:
     # guards the host against a schedule that pads a tile to an enormous
     # block (interpret mode would happily allocate it)
     max_block_elems: int = 1 << 24
+    # bounded retry for kernel-timing failures (transient crashes / flaky
+    # backends); lowering errors are structural and never retried
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    retry_backoff_cap_s: float = 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +252,9 @@ def lower(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
 
 
 def _time(thunk: Callable, opts: MeasureOptions) -> tuple[float, ...]:
+    # fault-injection site (DESIGN.md §14): one draw per timing attempt, so
+    # a rate schedule exercises the retry path independently each attempt
+    inject.check("measure.kernel")
     for _ in range(opts.warmup):
         thunk()
     times = []
@@ -242,6 +263,28 @@ def _time(thunk: Callable, opts: MeasureOptions) -> tuple[float, ...]:
         thunk()
         times.append(time.perf_counter() - t0)
     return tuple(times)
+
+
+def _time_retry(thunk: Callable, opts: MeasureOptions,
+                workload: TensorExpr) -> tuple[float, ...]:
+    """Time with bounded retry + capped exponential backoff; re-raises the
+    last failure once ``max_retries`` extra attempts are exhausted."""
+    for attempt in range(opts.max_retries + 1):
+        if attempt:
+            time.sleep(min(opts.retry_backoff_s * 2 ** (attempt - 1),
+                           opts.retry_backoff_cap_s))
+            st = obs.state()
+            if st is not None:
+                st.metrics.counter("tuner.measure_retries").inc()
+                st.tracer.instant("tuner.measure_retry",
+                                  {"workload": workload.name,
+                                   "attempt": attempt})
+        try:
+            return _time(thunk, opts)
+        except Exception:
+            if attempt >= opts.max_retries:
+                raise
+    raise AssertionError("unreachable")  # pragma: no cover
 
 
 def _fail_result(e: Exception, point: KernelPoint | None,
@@ -259,9 +302,27 @@ def _fail_result(e: Exception, point: KernelPoint | None,
                          error_type=type(e).__name__)
 
 
+def _quarantined_result(point: KernelPoint,
+                        workload: TensorExpr) -> MeasureResult:
+    """Skip a candidate the tuning DB has quarantined: inf latency with a
+    distinguishing error_type, and no kernel time burned."""
+    st = obs.state()
+    if st is not None:
+        st.metrics.counter("tuner.quarantine_skips").inc()
+        st.tracer.instant("tuner.quarantine_skip",
+                          {"workload": workload.name,
+                           "key": quarantine_key(point)})
+    return MeasureResult(math.inf, (), point,
+                         "quarantined by tuning-db failure history",
+                         error_type="Quarantined")
+
+
 def measure_one(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
-                opts: MeasureOptions | None = None) -> MeasureResult:
-    """Lower and time one candidate; never raises on candidate failure."""
+                opts: MeasureOptions | None = None,
+                quarantine: set[str] | None = None) -> MeasureResult:
+    """Lower and time one candidate; never raises on candidate failure.
+    ``quarantine`` holds :func:`quarantine_key` strings of candidates the
+    tuning DB has marked persistently failing — they are skipped unrun."""
     opts = opts or MeasureOptions()
     with obs.span("tuner.measure",
                   {"workload": workload.name, "backend": opts.backend}
@@ -269,9 +330,14 @@ def measure_one(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
         t0 = time.perf_counter()
         try:
             point, thunk = lower(workload, hw, schedule, opts)
-            times = _time(thunk, opts)
         except Exception as e:
             return _fail_result(e, None, time.perf_counter() - t0, workload)
+        if quarantine and quarantine_key(point) in quarantine:
+            return _quarantined_result(point, workload)
+        try:
+            times = _time_retry(thunk, opts, workload)
+        except Exception as e:
+            return _fail_result(e, point, time.perf_counter() - t0, workload)
         st = obs.state()
         if st is not None:
             st.metrics.counter("tuner.measured").inc()
@@ -282,13 +348,15 @@ def measure_one(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
 def measure_batch(workload: TensorExpr,
                   hw_configs: HWConfig | Sequence[HWConfig],
                   schedules: Sequence[Schedule],
-                  opts: MeasureOptions | None = None) -> list[MeasureResult]:
+                  opts: MeasureOptions | None = None,
+                  quarantine: set[str] | None = None) -> list[MeasureResult]:
     """Measure a candidate population, deduplicating identical lowerings.
 
     Many (hw, schedule) points lower to the same KernelPoint (e.g. tiles
     that pad to the same block shape); each distinct point is compiled and
     timed once and its result shared — the batched analogue of the cost
-    model's EvalCache, but for wall-clock measurements.
+    model's EvalCache, but for wall-clock measurements.  Candidates whose
+    :func:`quarantine_key` is in ``quarantine`` are skipped unrun.
     """
     opts = opts or MeasureOptions()
     schedules = list(schedules)
@@ -315,10 +383,13 @@ def measure_batch(workload: TensorExpr,
                 out.append(_fail_result(e, None, time.perf_counter() - t0,
                                         workload))
                 continue
+            if quarantine and quarantine_key(point) in quarantine:
+                out.append(_quarantined_result(point, workload))
+                continue
             res = memo.get(point)
             if res is None:
                 try:
-                    times = _time(thunk, opts)
+                    times = _time_retry(thunk, opts, workload)
                     res = MeasureResult(float(np.median(times)), times, point,
                                         elapsed_s=time.perf_counter() - t0)
                     st = obs.state()

@@ -1,0 +1,525 @@
+"""Chaos conformance suite (DESIGN.md §14).
+
+Deterministic fault injection (``ft/inject.py``) drives failures through
+the stack's real failure points, and this suite asserts the three graceful-
+degradation guarantees the robustness layer promises:
+
+  * **bit-identical survivors** — requests that complete under an injected
+    fault schedule produce exactly the tokens a fault-free run produces
+    (page faults degrade to preemption, per-request prefill faults are
+    isolated by the per-slot position contract);
+  * **leak-free pool** — after any interleaving of faults, cancellations,
+    expiries, and completions the PageAllocator's free list is exactly
+    restored (hypothesis widens this to random op sequences where
+    installed, mirroring test_paged_kv.py);
+  * **no hang** — a persistent fault schedule turns into
+    :class:`EngineStalledError` via the progress watchdog, never an
+    infinite loop.
+
+Plus the rest of §14's surface: exactly-once terminal statuses, measured-
+autotuning retry/quarantine, codesign kill/resume bit-identity, and the
+chaos telemetry counters in the exported artifact.
+"""
+import functools
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.core import workloads as W
+from repro.core.codesign import Constraints, codesign
+from repro.core.hw_primitives import HWConfig
+from repro.core.intrinsics import GEMM
+from repro.core.matching import match
+from repro.core.sw_primitives import Schedule
+from repro.ft import CheckpointManager, ProgressWatchdog, inject
+from repro.launch.paging import PageAllocator
+from repro.launch.serve import (EngineStalledError, PagedServeEngine,
+                                Request, ServeEngine, make_requests,
+                                serve_requests)
+from repro.models import family_module, reduced
+from repro.obs.export import validate_telemetry_file
+from repro.tuner import measure as M
+from repro.tuner.db import TuningDB
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+    # the autouse disarm fixture is pure teardown — safe across examples
+    _CHAOS_SETTINGS = dict(
+        deadline=None,
+        suppress_health_check=[HealthCheck.function_scoped_fixture])
+except ImportError:                                # pragma: no cover - CI has it
+    HAVE_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_plan_leaks():
+    """A test that arms a fault plan must never leak it into the next."""
+    yield
+    inject.disarm()
+
+
+def _req(rid, n=3, max_new=4, **kw):
+    return Request(rid, np.arange(1, n + 1, dtype=np.int32), max_new, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _family(arch):
+    cfg = reduced(get_config(arch))
+    mod = family_module(cfg)
+    return cfg, mod.init(cfg, KEY, tp=1)
+
+
+class _Clock:
+    """Controllable engine clock: deadlines expire when the test says so."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism (model-free)
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_is_pure_function_of_seed_site_index():
+    def drive(plan):
+        return [plan.fire("a") for _ in range(40)]
+
+    assert drive(inject.FaultPlan(seed=7, rates={"a": 0.3})) == \
+        drive(inject.FaultPlan(seed=7, rates={"a": 0.3}))
+    assert drive(inject.FaultPlan(seed=7, rates={"a": 0.3})) != \
+        drive(inject.FaultPlan(seed=8, rates={"a": 0.3}))
+
+
+def test_fault_sites_have_independent_streams():
+    """Interleaving calls at another site must not perturb a site's
+    schedule — the property the bit-exactness gates build on."""
+    lone = inject.FaultPlan(seed=3, rates={"a": 0.4})
+    a_alone = [lone.fire("a") for _ in range(30)]
+    mixed = inject.FaultPlan(seed=3, rates={"a": 0.4, "b": 0.9})
+    a_mixed = []
+    for i in range(30):
+        for _ in range(i % 3):          # irregular traffic at site b
+            mixed.fire("b")
+        a_mixed.append(mixed.fire("a"))
+    assert a_alone == a_mixed
+
+
+def test_fault_exact_indices_and_cap():
+    plan = inject.FaultPlan(seed=0, at={"s": [1, 4, 5]}, max_faults=2)
+    hits = [i for i in range(8) if plan.fire("s")]
+    assert hits == [1, 4]               # cap turned index 5 into a no-fault
+    assert plan.calls["s"] == 8 and plan.fired["s"] == 2
+
+
+def test_disarmed_check_is_a_noop():
+    inject.disarm()
+    for _ in range(5):
+        inject.check("page.alloc", MemoryError)   # must not raise
+    assert inject.fire("page.alloc") is False
+
+
+def test_progress_watchdog_trips_only_on_flat_signature():
+    dog = ProgressWatchdog(stall_limit=3)
+    for sig in [(1, 0), (2, 0), (2, 0), (2, 1)]:   # progress keeps resetting
+        dog.beat(sig)
+    assert not dog.stalled
+    for _ in range(3):
+        dog.beat((2, 1))
+    assert dog.stalled
+
+
+# ---------------------------------------------------------------------------
+# allocator leak-freedom under injected faults (model-free)
+# ---------------------------------------------------------------------------
+
+def _alloc_chaos(n_pages, page_size, seed, n_ops, rate):
+    """Random alloc/free interleaving with page.alloc faults armed; the
+    free list must be exactly restored once everything is freed."""
+    inject.arm(seed=seed, rates={"page.alloc": rate})
+    try:
+        alloc = PageAllocator(n_pages, page_size)
+        rng = np.random.default_rng(seed)
+        live = []
+        for _ in range(n_ops):
+            if live and rng.random() < 0.45:
+                alloc.free(live.pop(int(rng.integers(len(live)))))
+            else:
+                try:
+                    live.append(alloc.alloc(int(rng.integers(1, 4))))
+                except MemoryError:
+                    continue            # injected or genuine: both recoverable
+        held = [p for pages in live for p in pages]
+        assert len(held) == len(set(held))          # no double allocation
+        assert len(held) + alloc.n_free == n_pages  # conservation mid-run
+        for pages in live:
+            alloc.free(pages)
+        assert alloc.n_free == alloc.n_pages
+        assert alloc.free_pages == tuple(range(n_pages))
+    finally:
+        inject.disarm()
+
+
+def test_allocator_leak_free_under_faults_deterministic():
+    for seed in range(6):
+        _alloc_chaos(n_pages=12, page_size=2, seed=seed, n_ops=60, rate=0.3)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(1, 16), st.integers(1, 8),
+           st.integers(0, 2**31 - 1), st.integers(1, 80))
+    @settings(max_examples=40, **_CHAOS_SETTINGS)
+    def test_allocator_leak_free_under_faults_hypothesis(
+            n_pages, page_size, seed, n_ops):
+        _alloc_chaos(n_pages, page_size, seed, n_ops, rate=0.25)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation without model work (fake clock; both engines)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_degraded_terminals_reported_exactly_once(paged):
+    cfg, params = _family("qwen3-8b")
+    clk = _Clock()
+    if paged:
+        eng = PagedServeEngine(cfg, params, slots=2, max_seq=16, page_size=4,
+                               clock=clk)
+    else:
+        eng = ServeEngine(cfg, params, slots=2, max_seq=16, clock=clk)
+    rej = _req(0, n=16, max_new=2)                 # prompt fills the budget
+    assert eng.submit(rej) is False and rej.status == "REJECTED"
+    late = _req(1, deadline_s=5.0)
+    assert eng.submit(late) is True and late.deadline_at == 5.0
+    vic = _req(2)
+    eng.submit(vic)
+    assert eng.cancel(2) is True and vic.status == "CANCELLED"
+    assert eng.cancel(2) is False                  # already terminal
+    assert eng.cancel(99) is False                 # unknown rid
+    clk.t = 10.0                                   # past the deadline
+    done = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+    assert {r.rid: r.status for r in done} == \
+        {0: "REJECTED", 1: "EXPIRED", 2: "CANCELLED"}
+    assert eng.terminal == []                      # drained, not re-reported
+    assert eng.run() == []
+
+
+def test_paged_rejects_request_that_can_never_fit():
+    cfg, params = _family("qwen3-8b")
+    eng = PagedServeEngine(cfg, params, slots=2, max_seq=16, page_size=4,
+                           n_pages=2)
+    big = _req(0, n=5, max_new=10)                 # peak 14 rows > 8-row pool
+    assert eng.submit(big) is False and big.status == "REJECTED"
+    assert eng.alloc.n_free == eng.alloc.n_pages
+
+
+def _terminal_fates(paged, fates):
+    """Submit one request per fate (reject/cancel/expire) in order; drain;
+    -> rid -> status.  Never admits anything, so no model work runs."""
+    cfg, params = _family("qwen3-8b")
+    clk = _Clock()
+    eng = (PagedServeEngine(cfg, params, slots=2, max_seq=16, page_size=4,
+                            clock=clk) if paged
+           else ServeEngine(cfg, params, slots=2, max_seq=16, clock=clk))
+    for rid, fate in enumerate(fates):
+        if fate == "reject":
+            eng.submit(_req(rid, n=16, max_new=2))
+        elif fate == "cancel":
+            eng.submit(_req(rid))
+            assert eng.cancel(rid)
+        else:
+            eng.submit(_req(rid, deadline_s=1.0))
+    clk.t = 2.0
+    done = eng.run()
+    assert [r.rid for r in done] == list(range(len(fates)))
+    return {r.rid: r.status for r in done}
+
+
+FATE_STATUS = {"reject": "REJECTED", "cancel": "CANCELLED",
+               "expire": "EXPIRED"}
+
+
+def test_every_fate_mix_reports_exactly_once_deterministic():
+    rng = np.random.default_rng(0)
+    fates = list(FATE_STATUS)
+    for paged in (False, True):
+        for _ in range(4):
+            mix = [fates[int(i)] for i in rng.integers(0, 3, size=6)]
+            got = _terminal_fates(paged, mix)
+            assert got == {i: FATE_STATUS[f] for i, f in enumerate(mix)}
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.booleans(),
+           st.lists(st.sampled_from(sorted(FATE_STATUS)), min_size=1,
+                    max_size=8))
+    @settings(max_examples=20, **_CHAOS_SETTINGS)
+    def test_every_fate_mix_reports_exactly_once_hypothesis(paged, mix):
+        got = _terminal_fates(paged, mix)
+        assert got == {i: FATE_STATUS[f] for i, f in enumerate(mix)}
+
+
+# ---------------------------------------------------------------------------
+# paged serving under chaos: bit-identical survivors, leak-free, no hang
+# ---------------------------------------------------------------------------
+
+def _copies(base):
+    return [Request(r.rid, r.prompt.copy(), r.max_new, priority=r.priority)
+            for r in base]
+
+
+def _run_paged(cfg, params, reqs, **kw):
+    eng = PagedServeEngine(cfg, params, slots=3, max_seq=32, page_size=2,
+                           n_pages=12, prefill_chunk=4, age_steps=0, **kw)
+    for r in reqs:
+        eng.submit(r)
+    return eng, eng.run()
+
+
+@pytest.fixture(scope="module")
+def paged_baseline():
+    """Fault-free reference run: the outputs every chaos run's OK-status
+    survivors are compared against, bit-for-bit."""
+    cfg, params = _family("qwen3-8b")
+    base = make_requests(cfg, 5, 4, seed=3, priorities=(0, 2))
+    eng, done = _run_paged(cfg, params, _copies(base))
+    assert all(r.status == "OK" for r in done)
+    assert eng.alloc.n_free == eng.alloc.n_pages
+    return cfg, params, base, {r.rid: list(r.out) for r in done}
+
+
+def test_page_faults_never_change_outputs(paged_baseline):
+    """Injected allocation failures degrade exactly like page pressure
+    (bit-exact preempt + retry): every request still completes OK with the
+    fault-free tokens, and the pool is leak-free."""
+    cfg, params, base, ref = paged_baseline
+    plan = inject.arm(seed=11, rates={"page.alloc": 0.3})
+    try:
+        eng, done = _run_paged(cfg, params, _copies(base))
+    finally:
+        inject.disarm()
+    assert plan.total_fired > 0                    # chaos actually happened
+    assert {r.rid: r.status for r in done} == {r.rid: "OK" for r in base}
+    for r in done:
+        assert r.out == ref[r.rid], f"request {r.rid} diverged"
+    assert eng.alloc.n_free == eng.alloc.n_pages
+
+
+def test_mixed_chaos_survivors_bit_identical(paged_baseline):
+    """Prefill fault (per-request fail-stop) + transient decode-tick faults
+    + page faults, all in one seeded plan: exactly one request FAILs, every
+    survivor's output is bit-identical to the fault-free run, every request
+    reaches exactly one terminal status, and nothing leaks."""
+    cfg, params, base, ref = paged_baseline
+    plan = inject.arm(seed=5, rates={"page.alloc": 0.15},
+                      at={"serve.prefill": [1], "serve.decode": [0, 2]})
+    try:
+        eng, done = _run_paged(cfg, params, _copies(base))
+    finally:
+        inject.disarm()
+    assert plan.fired.get("serve.prefill") == 1
+    assert plan.fired.get("serve.decode") == 2
+    statuses = [r.status for r in done]
+    assert sorted(r.rid for r in done) == [r.rid for r in base]
+    assert statuses.count("FAILED") == 1
+    assert statuses.count("OK") == len(base) - 1
+    for r in done:
+        if r.status == "OK":
+            assert r.out == ref[r.rid], f"survivor {r.rid} diverged"
+    assert eng.alloc.n_free == eng.alloc.n_pages
+
+
+def test_persistent_fault_schedule_fails_stop_not_hang():
+    cfg, params = _family("qwen3-8b")
+    inject.arm(seed=0, rates={"serve.decode": 1.0})
+    try:
+        eng = PagedServeEngine(cfg, params, slots=1, max_seq=16, page_size=4,
+                               prefill_chunk=8, stall_limit=6)
+        eng.submit(_req(0, n=3, max_new=3))
+        with pytest.raises(EngineStalledError) as ei:
+            eng.run()
+    finally:
+        inject.disarm()
+    diag = ei.value.diagnostics
+    assert diag["stall_limit"] == 6
+    assert diag["active"] == {0: 0}                # the stuck request
+    assert "pages_free" in diag and "preemptions" in diag
+
+
+def test_serve_requests_counts_every_status_exactly_once():
+    cfg, params = _family("qwen3-8b")
+    reqs = make_requests(cfg, 3, 3, seed=4) + \
+        [Request(3, np.arange(1, 40, dtype=np.int32), 2)]   # over budget
+    done, stats = serve_requests(cfg, params, reqs, slots=2, max_seq=32)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    assert stats["status_counts"] == {"OK": 3, "REJECTED": 1}
+    assert sum(stats["status_counts"].values()) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# measured autotuning: bounded retry + persistent quarantine
+# ---------------------------------------------------------------------------
+
+def _gemm_candidate():
+    wl = W.gemm(32, 32, 32, name="g32")
+    choice = match(GEMM, wl)[0]
+    tiles = tuple(sorted((c, 16) for c in choice.mapped_compute_indices))
+    sched = Schedule(choice, tiles, tuple(wl.all_indices()), 0)
+    hw = HWConfig(intrinsic="GEMM", pe_rows=8, pe_cols=8, pe_depth=8,
+                  vmem_kib=2048)
+    return wl, hw, sched
+
+
+_FAST_RETRY = dict(warmup=0, repeats=1, max_retries=2,
+                   retry_backoff_s=0.0)
+
+
+def test_measure_retry_recovers_from_transient_fault():
+    wl, hw, sched = _gemm_candidate()
+    plan = inject.arm(seed=0, at={"measure.kernel": [0]})
+    res = M.measure_one(wl, hw, sched, M.MeasureOptions(**_FAST_RETRY))
+    assert res.ok and res.latency_s > 0
+    assert plan.calls["measure.kernel"] == 2       # fault, then the retry
+
+
+def test_measure_retry_exhaustion_then_quarantine_roundtrip(tmp_path):
+    wl, hw, sched = _gemm_candidate()
+    plan = inject.arm(seed=0, rates={"measure.kernel": 1.0})
+    res = M.measure_one(wl, hw, sched, M.MeasureOptions(**_FAST_RETRY))
+    inject.disarm()
+    assert not res.ok and res.error_type == "InjectedFault"
+    assert res.point is not None                   # timing, not lowering
+    assert plan.calls["measure.kernel"] == 3       # 1 + max_retries attempts
+
+    # retry-exhausted failures join the DB quarantine and survive a save/
+    # load cycle; future measurement runs skip the candidate unrun
+    key = M.quarantine_key(res.point)
+    db = TuningDB(tmp_path / "db.json")
+    assert db.quarantine_candidate(key, {"error_type": res.error_type})
+    assert not db.quarantine_candidate(key)        # idempotent
+    db.save()
+    quarantined = TuningDB.load(tmp_path / "db.json").quarantined_keys()
+    assert key in quarantined
+
+    skipped = M.measure_one(wl, hw, sched, M.MeasureOptions(**_FAST_RETRY),
+                            quarantine=quarantined)
+    assert not skipped.ok and skipped.error_type == "Quarantined"
+    assert skipped.times_s == () and skipped.elapsed_s == 0.0  # never run
+
+
+def test_structural_lowering_errors_are_not_retried():
+    plan = inject.arm(seed=0, rates={"measure.kernel": 1.0})
+    wl, hw, sched = _gemm_candidate()
+    res = M.measure_one(W.ttm(8, 8, 8, 8), hw, sched,
+                        M.MeasureOptions(**_FAST_RETRY))
+    assert not res.ok and "no kernel lowering" in res.error
+    assert plan.calls.get("measure.kernel", 0) == 0   # never reached timing
+
+
+# ---------------------------------------------------------------------------
+# codesign kill/resume: bit-identical committed solution
+# ---------------------------------------------------------------------------
+
+def _mini_codesign(**kw):
+    wl = [W.gemm(64, 64, 64, name="g0")]
+    return codesign(wl, intrinsics=["GEMM", "DOT"], n_trials=3, n_init=2,
+                    seed=0, constraints=Constraints(power_w=1e4), **kw)
+
+
+def _sol_key(rep):
+    s = rep.solution
+    return (s.intrinsic, s.hw, s.latency_s, s.power_w,
+            sorted(s.schedules.items()))
+
+
+def test_codesign_kill_resume_is_bit_identical(tmp_path):
+    ref = _mini_codesign()
+    assert ref.solution is not None
+
+    ckdir = tmp_path / "ck"
+    full = _mini_codesign(checkpoint_dir=ckdir)
+    assert _sol_key(full) == _sol_key(ref)         # checkpointing is passive
+    mgr = CheckpointManager(ckdir, keep=8)
+    assert mgr.payload_steps() == [1, 2]           # one per intrinsic
+
+    # simulate a kill after the first intrinsic: drop the final checkpoint,
+    # then resume — the second intrinsic re-runs, the first is restored
+    (ckdir / "state-000000000002.pkl").unlink()
+    resumed = _mini_codesign(resume_from=ckdir)
+    assert _sol_key(resumed) == _sol_key(ref)
+    assert math.isfinite(resumed.solution.latency_s)
+
+
+def test_codesign_resume_rejects_foreign_checkpoint(tmp_path):
+    ckdir = tmp_path / "ck"
+    _mini_codesign(checkpoint_dir=ckdir)
+    wl = [W.gemm(64, 64, 64, name="g0")]
+    with pytest.warns(UserWarning, match="signature"):
+        rep = codesign(wl, intrinsics=["GEMM", "DOT"], n_trials=3, n_init=2,
+                       seed=1, constraints=Constraints(power_w=1e4),
+                       resume_from=ckdir)         # different seed: fresh run
+    assert rep.solution is not None
+
+
+def test_codesign_resume_from_empty_dir_starts_fresh(tmp_path):
+    rep = _mini_codesign(resume_from=tmp_path / "nothing-here")
+    assert _sol_key(rep) == _sol_key(_mini_codesign())
+
+
+# ---------------------------------------------------------------------------
+# chaos telemetry: the §14 counters land in the exported artifact
+# ---------------------------------------------------------------------------
+
+def test_chaos_counters_exported_and_schema_valid(tmp_path):
+    cfg, params = _family("qwen3-8b")
+    obs.enable()
+    try:
+        inject.arm(seed=0, rates={"page.alloc": 1.0})
+        with pytest.raises(MemoryError):
+            PageAllocator(4, 2).alloc(1)           # -> faults.injected
+        inject.disarm()
+
+        clk = _Clock()
+        eng = PagedServeEngine(cfg, params, slots=2, max_seq=16, page_size=4,
+                               clock=clk)
+        eng.submit(_req(0, n=16, max_new=2))       # -> requests_rejected
+        eng.submit(_req(1, deadline_s=1.0))        # -> requests_expired
+        eng.submit(_req(2))
+        eng.cancel(2)                              # -> requests_cancelled
+        clk.t = 5.0
+        eng.run()
+
+        wl, hw, sched = _gemm_candidate()
+        inject.arm(seed=0, at={"measure.kernel": [0]})
+        assert M.measure_one(wl, hw, sched,
+                             M.MeasureOptions(**_FAST_RETRY)).ok
+        inject.disarm()
+
+        path = obs.export_telemetry(tmp_path / "telemetry.json")
+        assert validate_telemetry_file(path) == []
+        doc = json.loads(path.read_text())
+        counters = doc["metrics"]["counters"]
+        for name in ("faults.injected", "serve.requests_rejected",
+                     "serve.requests_cancelled", "serve.requests_expired",
+                     "tuner.measure_retries"):
+            assert counters.get(name, {}).get("value", 0) >= 1, name
+        events = {ev["name"] for ev in doc["trace"]["events"]}
+        assert {"fault.inject", "req.degrade",
+                "tuner.measure_retry"} <= events
+    finally:
+        obs.disable()
+        inject.disarm()

@@ -128,9 +128,12 @@ def test_per_request_budget_retires_early():
     done = eng.run()
     assert len(done[0].out) == 1 + (6 - 3)
     assert len(done[1].out) == 4
-    # prompt must leave room under its budget
-    with pytest.raises(ValueError, match="room"):
-        eng.submit(_req(2, n=6, max_new=2, max_seq=6))
+    # prompt must leave room under its budget: graceful rejection, not a
+    # raise (DESIGN.md §14) — the request turns terminal immediately
+    rej = _req(2, n=6, max_new=2, max_seq=6)
+    assert eng.submit(rej) is False
+    assert rej.status == "REJECTED"
+    assert eng.run() == [rej]          # reported exactly once via run()
 
 
 def test_max_new_one_finishes_at_prefill():

@@ -261,7 +261,7 @@ def test_measure_rerank_flags_mixed_totals(monkeypatch):
     best_measured_total_s is then NOT wall-clock truth."""
     from repro.tuner import measure as M_
 
-    def always_fail(w, hw, sched, opts):
+    def always_fail(w, hw, sched, opts, quarantine=None):
         return M_.MeasureResult(latency_s=math.inf, error="forced failure")
 
     monkeypatch.setattr(M_, "measure_one", always_fail)
