@@ -64,6 +64,9 @@ class Target:
     a_pe_um2: float
     a_mem_um2_b: float
     static_w_per_norm: float  # static power at full resource envelope
+    # inter-chip link bandwidth (GB/s per chip) — the tensor-parallel
+    # all-reduce term; only read when hw.tp > 1
+    link_gbps: float = 100.0
 
 
 SPATIAL = Target("spatial", freq_hz=940e6, hbm_gbps=32.0,
@@ -73,12 +76,16 @@ SPATIAL = Target("spatial", freq_hz=940e6, hbm_gbps=32.0,
                  # invocation (the paper's interfaces are accelerator
                  # instruction sequences, not host launches)
                  e_mac_pj=0.6, e_sram_pj_b=1.0, e_dram_pj_b=30.0,
-                 a_pe_um2=1.0e5, a_mem_um2_b=120.0, static_w_per_norm=2.0)
+                 a_pe_um2=1.0e5, a_mem_um2_b=120.0, static_w_per_norm=2.0,
+                 # board-to-board serial links: far below HBM, the reason
+                 # TP only pays off once a chip is bandwidth-bound
+                 link_gbps=16.0)
 
 TPU_V5E = Target("tpu", freq_hz=940e6, hbm_gbps=819.0,
                  dma_overhead_bytes=512, mxu_aligned=True, startup_s=1e-6,
                  e_mac_pj=0.25, e_sram_pj_b=0.6, e_dram_pj_b=15.0,
-                 a_pe_um2=1.0e5, a_mem_um2_b=120.0, static_w_per_norm=4.0)
+                 a_pe_um2=1.0e5, a_mem_um2_b=120.0, static_w_per_norm=4.0,
+                 link_gbps=200.0)   # ICI, per chip
 
 TARGETS = {"spatial": SPATIAL, "tpu": TPU_V5E}
 
@@ -125,7 +132,8 @@ def n_pes(hw: HWConfig) -> int:
 def accelerator_area(hw: HWConfig, target: Target) -> float:
     mem = hw.vmem_bytes + hw.local_accum_kib * 1024
     return (target.a_pe_um2 * n_pes(hw)
-            + target.a_mem_um2_b * mem * (1.0 + 0.05 * (hw.banks - 1)))
+            + target.a_mem_um2_b * mem
+            * (1.0 + 0.05 * (hw.banks - 1))) * hw.tp
 
 
 def _ceil(a: int, b: int) -> int:
@@ -213,8 +221,11 @@ def _evaluate_reference(workload: TensorExpr, schedule: Schedule, hw: HWConfig,
                           f"working set {working}B > vmem {hw.vmem_bytes}B")
 
     # --- compute time --------------------------------------------------------
+    # tp > 1 replicates the chip: peak compute and aggregate HBM scale with
+    # tp, weights/outputs shard, and every call pays a ring all-reduce of
+    # its partial outputs over the inter-chip link (the interconnect term)
     pes = n_pes(hw)
-    peak = 2.0 * pes * tgt.freq_hz
+    peak = 2.0 * pes * tgt.freq_hz * hw.tp
     eff = 1.0
     if tgt.mxu_aligned:
         eff *= _mxu_eff(hw.pe_rows, 8) * _mxu_eff(hw.pe_cols, 128)
@@ -247,13 +258,14 @@ def _evaluate_reference(workload: TensorExpr, schedule: Schedule, hw: HWConfig,
 
     hbm_bytes = 0.0
     mem_s = 0.0
+    bw = tgt.hbm_gbps * 1e9 * hw.tp
     for tname in tensors:
         n_fetch = fetches(idx_of[tname])
         burst = min(hw.burst_bytes, contig[tname])
         dma_eff = burst / (burst + tgt.dma_overhead_bytes)
         tb = n_fetch * foot[tname]
         hbm_bytes += tb
-        mem_s += tb / (tgt.hbm_gbps * 1e9 * dma_eff)
+        mem_s += tb / (bw * dma_eff)
     # output: revisit when a reduced loop is outer to the O-resident span
     p_out = max((pos[l] for l in order if l in idx_of["__out__"]), default=-1)
     revisit = any(l in workload.reduced for l in order[: p_out + 1]
@@ -263,7 +275,7 @@ def _evaluate_reference(workload: TensorExpr, schedule: Schedule, hw: HWConfig,
     burst = min(hw.burst_bytes, out_contig)
     dma_eff = burst / (burst + tgt.dma_overhead_bytes)
     hbm_bytes += out_total
-    mem_s += out_total / (tgt.hbm_gbps * 1e9 * dma_eff)
+    mem_s += out_total / (bw * dma_eff)
 
     # --- combine ----------------------------------------------------------------
     if hw.banks >= 2:
@@ -271,14 +283,22 @@ def _evaluate_reference(workload: TensorExpr, schedule: Schedule, hw: HWConfig,
     else:
         latency = compute_s + mem_s
 
+    # --- interconnect (tensor parallelism) ----------------------------------
+    # ring all-reduce of each call's partial outputs: 2(t-1)/t of the output
+    # bytes cross every chip's link; exactly zero at tp=1
+    ic_bytes = calls * out_bytes * (2.0 * (hw.tp - 1) / hw.tp)
+    latency += ic_bytes / (tgt.link_gbps * 1e9)
+
     # --- energy / power / area ---------------------------------------------------
     macs = total_flops / 2.0
     sram_bytes = 3.0 * macs * DTYPE_BYTES / max(1, min(hw.pe_rows, 128))
     area = accelerator_area(hw, tgt)
-    area_norm = (tgt.a_pe_um2 * pes) / (tgt.a_pe_um2 * 4096) \
-        + (hw.vmem_bytes * tgt.a_mem_um2_b) / (16384 * 1024 * tgt.a_mem_um2_b)
+    area_norm = ((tgt.a_pe_um2 * pes) / (tgt.a_pe_um2 * 4096)
+                 + (hw.vmem_bytes * tgt.a_mem_um2_b)
+                 / (16384 * 1024 * tgt.a_mem_um2_b)) * hw.tp
     energy = (macs * tgt.e_mac_pj + sram_bytes * tgt.e_sram_pj_b
-              + hbm_bytes * tgt.e_dram_pj_b) * 1e-12 \
+              + hbm_bytes * tgt.e_dram_pj_b
+              + ic_bytes * tgt.e_dram_pj_b) * 1e-12 \
         + tgt.static_w_per_norm * area_norm * latency
     power = energy / max(latency, 1e-12)
 
@@ -570,6 +590,7 @@ def _batch_group(prep: _Prep, tgt: Target, hws: Sequence[HWConfig],
     banks = hw_arr("banks").astype(np.int64)
     local_kib = hw_arr("local_accum_kib").astype(np.int64)
     burst_cap = hw_arr("burst_bytes").astype(np.int64)
+    tp = hw_arr("tp").astype(np.int64)
     if single_hw:
         df_code = np.full(n, _DF_CODE[hws[0].dataflow], dtype=np.int64)
     else:
@@ -622,7 +643,7 @@ def _batch_group(prep: _Prep, tgt: Target, hws: Sequence[HWConfig],
     pes = np.where(icode == 0, pe_rows * pe_cols,
                    np.where(icode == 1, pe_rows * np.minimum(pe_depth, 128),
                             np.minimum(pe_depth, 4096)))
-    peak = 2.0 * pes * tgt.freq_hz
+    peak = 2.0 * pes * tgt.freq_hz * tp
     eff = np.ones(n)
     if tgt.mxu_aligned:
         eff = (pe_rows / (-(-pe_rows // 8) * 8)
@@ -651,7 +672,7 @@ def _batch_group(prep: _Prep, tgt: Target, hws: Sequence[HWConfig],
 
     hbm_bytes = np.zeros(n)
     mem_s = np.zeros(n)
-    bw = tgt.hbm_gbps * 1e9
+    bw = tgt.hbm_gbps * 1e9 * tp
     for mask, ft, cg in zip(prep.tensor_masks, foot, contig):
         n_fetch = fetches(mask)
         burst = np.minimum(burst_cap, cg)
@@ -679,18 +700,24 @@ def _batch_group(prep: _Prep, tgt: Target, hws: Sequence[HWConfig],
                + np.minimum(compute_s, mem_s) / np.maximum(calls, 1))
     latency = np.where(banks >= 2, overlap, compute_s + mem_s)
 
+    # --- interconnect (tensor parallelism): per-call output all-reduce ------
+    ic_bytes = calls * out_bytes * (2.0 * (tp - 1) / tp)
+    latency = latency + ic_bytes / (tgt.link_gbps * 1e9)
+
     # --- energy / power / area ----------------------------------------------
     macs = total_flops / 2.0
     sram_bytes = (3.0 * macs * DTYPE_BYTES
                   / np.maximum(1, np.minimum(pe_rows, 128)))
     mem_bytes_cfg = vmem + local_kib * 1024
     area = (tgt.a_pe_um2 * pes
-            + tgt.a_mem_um2_b * mem_bytes_cfg * (1.0 + 0.05 * (banks - 1)))
+            + tgt.a_mem_um2_b * mem_bytes_cfg
+            * (1.0 + 0.05 * (banks - 1))) * tp
     area_norm = ((tgt.a_pe_um2 * pes) / (tgt.a_pe_um2 * 4096)
                  + (vmem * tgt.a_mem_um2_b)
-                 / (16384 * 1024 * tgt.a_mem_um2_b))
+                 / (16384 * 1024 * tgt.a_mem_um2_b)) * tp
     energy = ((macs * tgt.e_mac_pj + sram_bytes * tgt.e_sram_pj_b
-               + hbm_bytes * tgt.e_dram_pj_b) * 1e-12
+               + hbm_bytes * tgt.e_dram_pj_b
+               + ic_bytes * tgt.e_dram_pj_b) * 1e-12
               + tgt.static_w_per_norm * area_norm * latency)
     power = energy / np.maximum(latency, 1e-12)
 

@@ -40,6 +40,7 @@ class HWConfig:
     local_accum_kib: int = 0      # PE-local accumulator (0 = none)
     burst_bytes: int = 4096       # DMA burst granularity
     dataflow: str = "OS"
+    tp: int = 1                   # tensor-parallel degree (replicated chips)
 
     def __post_init__(self) -> None:
         if self.link_pattern != "systolic":
@@ -47,6 +48,8 @@ class HWConfig:
                              "(DESIGN.md §2: linkPEs degenerates on TPU)")
         if self.dataflow not in DATAFLOWS:
             raise ValueError(f"dataflow must be one of {DATAFLOWS}")
+        if not isinstance(self.tp, int) or self.tp < 1:
+            raise ValueError(f"tp must be a positive int, got {self.tp!r}")
 
     # -- derived quantities --------------------------------------------------
     @property
@@ -70,7 +73,7 @@ class HWConfig:
     def encode(self) -> tuple:
         return (self.intrinsic, self.pe_rows, self.pe_cols, self.pe_depth,
                 self.vmem_kib, self.banks, self.local_accum_kib,
-                self.burst_bytes, self.dataflow)
+                self.burst_bytes, self.dataflow, self.tp)
 
 
 class HWBuilder:
@@ -111,6 +114,14 @@ class HWBuilder:
 
     def dataflow(self, df: str) -> "HWBuilder":
         self._cfg = replace(self._cfg, dataflow=df.upper())
+        return self
+
+    def parallelize(self, tp: int) -> "HWBuilder":
+        """Replicate the chip ``tp``-way (tensor parallelism): the weights
+        and compute shard across ``tp`` identical instances joined by the
+        target's inter-chip link (cost_model charges the per-call
+        all-reduce)."""
+        self._cfg = replace(self._cfg, tp=int(tp))
         return self
 
     def build(self) -> HWConfig:

@@ -26,6 +26,14 @@ AXES: dict[str, tuple] = {
 }
 _AXIS_NAMES = tuple(AXES)
 
+#: Opt-in tensor-parallelism axis: pass ``codesign(...,
+#: space_axes=PARALLELISM_AXES)`` to let MOBO explore (chip config × TP
+#: degree) jointly — the cost model charges the per-call all-reduce over
+#: ``Target.link_gbps`` and scales area/static power by the chip count.
+#: Kept out of the default AXES so seeded single-chip searches (and their
+#: goldens) are untouched.
+PARALLELISM_AXES: dict[str, tuple] = {"tp": (1, 2, 4, 8)}
+
 
 @dataclass
 class HWSpace:

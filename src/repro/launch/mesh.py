@@ -16,11 +16,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
+def make_host_mesh(*, tp: int = 1):
     """Whatever this host offers, as a ('data','model') mesh — used by smoke
-    tests and the CPU example drivers."""
+    tests and the CPU example drivers.  ``tp`` sets the model-axis size
+    (tensor parallelism); it must divide the host device count, the rest
+    becomes the data axis."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    if tp < 1 or n % tp:
+        raise ValueError(f"tp={tp} must be >= 1 and divide the host device "
+                         f"count ({n})")
+    return jax.make_mesh((n // tp, tp), ("data", "model"))
 
 
 def describe(mesh) -> str:

@@ -38,9 +38,10 @@ import numpy as np
 
 from repro import obs
 from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import named, param_shardings, tp_size
 from repro.ft import ProgressWatchdog, inject
 from repro.ft.inject import InjectedFault
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import describe, make_host_mesh
 from repro.launch.paging import PageAllocator, PriorityScheduler
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import family_module, reduced
@@ -273,6 +274,40 @@ def _jitted_steps(cfg, tp: int, impl: str, max_seq: int):
     return decode, prefill, jax.jit(write_slot)
 
 
+def _resolve_mesh_tp(mesh, tp: int) -> int:
+    """TP degree of a mesh-hosted engine: the mesh's 'model' axis.  An
+    explicit non-default ``tp`` must agree — params were padded with it."""
+    mtp = tp_size(mesh)
+    if tp not in (1, mtp):
+        raise ValueError(f"tp={tp} conflicts with the mesh's model axis "
+                         f"({mtp}); the mesh decides the TP degree")
+    return mtp
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_jitted_steps(cfg, tp: int, impl: str, max_seq: int, mesh):
+    """Mesh-aware :func:`_jitted_steps`: identical programs, but decode and
+    write_slot pin the cache's output sharding so it never silently
+    de-shards across steps.  Prefill stays unconstrained — its batch-1
+    cache is private and GSPMD lays it out from the sharded params.
+    ``mesh`` is hashable, so this shares the same per-key jit caching."""
+    decode, prefill, _ = _jitted_steps(cfg, tp, impl, max_seq)
+    mod = family_module(cfg)
+    c_sh = named(mod.cache_specs(cfg), mesh)
+    axes = mod.cache_slot_axes(cfg)
+
+    def write_slot(cache, slot_cache, slot):
+        return jax.tree_util.tree_map(
+            lambda c, pc, ax: jax.lax.dynamic_update_index_in_dim(
+                c, jax.lax.index_in_dim(pc, 0, ax, keepdims=False),
+                slot, ax),
+            cache, slot_cache, axes)
+
+    mesh_decode = jax.jit(make_decode_step(cfg, tp=tp, impl=impl),
+                          out_shardings=(None, c_sh))
+    return mesh_decode, prefill, jax.jit(write_slot, out_shardings=c_sh)
+
+
 class ServeEngine:
     """Per-slot continuous batching around one model + one shared cache.
 
@@ -287,18 +322,29 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 64,
                  tp: int = 1, impl: str = "xla",
-                 max_concurrency: int | None = None,
+                 max_concurrency: int | None = None, mesh=None,
                  clock=time.monotonic, stall_limit: int = 256):
         if cfg.embed_inputs:
             raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
                              f"(DESIGN.md §5)")
         self.cfg, self.params = cfg, params
         self.mod = family_module(cfg)
+        self.mesh = mesh
         self.n_slots, self.max_seq = slots, max_seq
         self.scheduler = FCFSScheduler(slots, max_concurrency)
-        self._decode, self._prefill, self._write_slot = _jitted_steps(
-            cfg, tp, impl, max_seq)
-        self.cache = self.mod.init_cache(cfg, slots, max_seq, tp)
+        if mesh is not None:
+            tp = _resolve_mesh_tp(mesh, tp)
+            self.params = jax.device_put(
+                params, param_shardings(self.mod, cfg, mesh))
+            self._decode, self._prefill, self._write_slot = \
+                _mesh_jitted_steps(cfg, tp, impl, max_seq, mesh)
+            self.cache = jax.device_put(
+                self.mod.init_cache(cfg, slots, max_seq, tp),
+                named(self.mod.cache_specs(cfg), mesh))
+        else:
+            self._decode, self._prefill, self._write_slot = _jitted_steps(
+                cfg, tp, impl, max_seq)
+            self.cache = self.mod.init_cache(cfg, slots, max_seq, tp)
         self.pos = np.zeros(slots, np.int64)   # per-slot next write position
         self.clock = clock
         self.stall_limit = stall_limit
@@ -479,6 +525,32 @@ def _paged_jitted_steps(cfg, tp: int, impl: str):
     return decode, jax.jit(write_slot), axes
 
 
+@functools.lru_cache(maxsize=None)
+def _mesh_paged_jitted_steps(cfg, tp: int, impl: str, mesh):
+    """Mesh-aware :func:`_paged_jitted_steps` for the batched-decode and
+    commit programs only: both pin the paged cache's output sharding (pool
+    kv-heads over 'model', physical rows replicated) so decode steps can
+    never de-shard it.  Chunked prefill keeps using the plain decode jit —
+    its private batch-1 dense cache is a different pytree, laid out by
+    GSPMD from the sharded params."""
+    mod = family_module(cfg)
+    axes = mod.paged_slot_axes(cfg)
+    c_sh = named(mod.paged_cache_specs(cfg), mesh)
+
+    def write_slot(cache, packed, slot, prows):
+        def wr(c, pc, ax):
+            if ax == "pool":
+                rows = jax.lax.index_in_dim(pc, 0, 1, keepdims=False)
+                return c.at[:, prows].set(rows.astype(c.dtype), mode="drop")
+            return jax.lax.dynamic_update_index_in_dim(
+                c, jax.lax.index_in_dim(pc, 0, ax, keepdims=False), slot, ax)
+        return jax.tree_util.tree_map(wr, cache, packed, axes)
+
+    decode = jax.jit(make_decode_step(cfg, tp=tp, impl=impl),
+                     out_shardings=(None, c_sh))
+    return decode, jax.jit(write_slot, out_shardings=c_sh)
+
+
 @dataclasses.dataclass
 class _Prefill:
     """An in-flight chunked prefill: a private batch-1 full-length dense
@@ -508,13 +580,19 @@ class PagedServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_seq: int = 64,
                  page_size: int = 8, n_pages: int | None = None,
                  prefill_chunk: int = 16, tp: int = 1, impl: str = "xla",
-                 max_concurrency: int | None = None, age_steps: int = 32,
+                 max_concurrency: int | None = None, mesh=None,
+                 age_steps: int = 32,
                  clock=time.monotonic, stall_limit: int = 256):
         if cfg.embed_inputs:
             raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
                              f"(DESIGN.md §5)")
         self.cfg, self.params = cfg, params
         self.mod = family_module(cfg)
+        self.mesh = mesh
+        if mesh is not None:
+            tp = _resolve_mesh_tp(mesh, tp)
+            self.params = jax.device_put(
+                params, param_shardings(self.mod, cfg, mesh))
         self.n_slots, self.max_seq = slots, max_seq
         self.prefill_chunk = max(1, prefill_chunk)
         self._tp = tp
@@ -522,11 +600,20 @@ class PagedServeEngine:
             n_pages = -(-max_seq // page_size) * slots
         self.alloc = PageAllocator(n_pages, page_size)
         self.scheduler = PriorityScheduler(slots, max_concurrency, age_steps)
+        # chunked prefill always runs the plain decode jit on its private
+        # dense cache; batched decode + commit swap in mesh-aware programs
+        # (pinned cache shardings) when a mesh hosts the engine
         self._decode, self._write_slot, self._axes = _paged_jitted_steps(
             cfg, tp, impl)
+        self._decode_batch = self._decode
         self._has_pool = "pool" in jax.tree_util.tree_leaves(self._axes)
         self.cache = self.mod.init_paged_cache(
             cfg, slots, n_pages * page_size, max_seq, tp)
+        if mesh is not None:
+            self._decode_batch, self._write_slot = _mesh_paged_jitted_steps(
+                cfg, tp, impl, mesh)
+            self.cache = jax.device_put(
+                self.cache, named(self.mod.paged_cache_specs(cfg), mesh))
         self.row_map = np.full((slots, max_seq), -1, np.int32)
         # pos sentinel max_seq: an idle/prefilling slot's decode-batch lane
         # writes out of range, which the paged scatter drops (DESIGN.md §12)
@@ -887,7 +974,7 @@ class PagedServeEngine:
             toks[s, 0] = self.scheduler.slots[s].next_token
             pos[s] = self.pos[s]
         with obs.span("serve.decode_step"):
-            logits, self.cache = self._decode(
+            logits, self.cache = self._decode_batch(
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(pos, jnp.int32), jnp.asarray(self.row_map))
         self.decode_steps += 1
@@ -1016,7 +1103,7 @@ def serve_requests(cfg, params, requests, *, slots: int = 4,
                    max_concurrency: int | None = None, paged: bool = False,
                    page_size: int = 8, n_pages: int | None = None,
                    prefill_chunk: int = 16, age_steps: int = 32,
-                   stall_limit: int = 256
+                   stall_limit: int = 256, mesh=None
                    ) -> tuple[list[Request], dict]:
     """Convenience wrapper: submit ``requests``, drain the engine, return
     ``(requests, stats)`` — every submitted request comes back with a
@@ -1031,11 +1118,11 @@ def serve_requests(cfg, params, requests, *, slots: int = 4,
             cfg, params, slots=slots, max_seq=max_seq, tp=tp, impl=impl,
             max_concurrency=max_concurrency, page_size=page_size,
             n_pages=n_pages, prefill_chunk=prefill_chunk,
-            age_steps=age_steps, stall_limit=stall_limit)
+            age_steps=age_steps, stall_limit=stall_limit, mesh=mesh)
     else:
         eng = ServeEngine(cfg, params, slots=slots, max_seq=max_seq, tp=tp,
                           impl=impl, max_concurrency=max_concurrency,
-                          stall_limit=stall_limit)
+                          stall_limit=stall_limit, mesh=mesh)
     for req in requests:
         eng.submit(req)
     done = eng.run()
@@ -1072,6 +1159,27 @@ def make_requests(cfg, n: int, max_new: int, seed: int = 0,
     return reqs
 
 
+def parse_mesh_flag(spec: str):
+    """``--mesh data=1,model=8`` -> a host ('data','model') mesh.  Both axes
+    must be named, their product must equal the host device count (widen
+    CPU hosts with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before any jax import)."""
+    shape: dict[str, int] = {}
+    for part in spec.split(","):
+        k, sep, v = part.partition("=")
+        if not sep or not v.strip().isdigit():
+            raise ValueError(f"--mesh expects axis=size pairs, got {part!r}")
+        shape[k.strip()] = int(v)
+    if sorted(shape) != ["data", "model"]:
+        raise ValueError(f"--mesh must name exactly data= and model=, "
+                         f"got {sorted(shape)}")
+    n = len(jax.devices())
+    if shape["data"] * shape["model"] != n:
+        raise ValueError(f"mesh {spec} wants {shape['data'] * shape['model']}"
+                         f" devices, host has {n}")
+    return make_host_mesh(tp=shape["model"])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-8b")
@@ -1092,6 +1200,10 @@ def main() -> None:
                          "equivalent capacity)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens prefetched per engine step (paged)")
+    ap.add_argument("--mesh", default=None, metavar="data=D,model=T",
+                    help="serve tensor-parallel over a device mesh, e.g. "
+                         "data=1,model=8 (product must equal the host "
+                         "device count)")
     ap.add_argument("--long-every", type=int, default=0,
                     help="every k-th request gets a long prompt (mixed "
                          "traffic; 0 = homogeneous)")
@@ -1153,9 +1265,18 @@ def main() -> None:
     if cfg.embed_inputs:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode loop "
                          f"(DESIGN.md §5) — use launch.train instead")
-    make_host_mesh()
+    if args.mesh:
+        try:
+            mesh = parse_mesh_flag(args.mesh)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        print(f"mesh: {describe(mesh)}")
+    else:
+        mesh = None
+        make_host_mesh()
+    tp = tp_size(mesh) if mesh is not None else 1
     mod = family_module(cfg)
-    params = mod.init(cfg, jax.random.PRNGKey(args.seed), tp=1)
+    params = mod.init(cfg, jax.random.PRNGKey(args.seed), tp=tp)
     requests = make_requests(cfg, args.requests, args.max_new, args.seed,
                              long_every=args.long_every)
     if args.deadline_s is not None:
@@ -1165,6 +1286,7 @@ def main() -> None:
     t0 = time.time()
     done, stats = serve_requests(
         cfg, params, requests, slots=args.slots, max_seq=args.max_seq,
+        tp=tp, mesh=mesh,
         max_concurrency=1 if args.sequential else None, paged=args.paged,
         page_size=args.page_size, n_pages=args.pages,
         prefill_chunk=args.prefill_chunk, stall_limit=args.stall_limit)

@@ -320,6 +320,18 @@ def kv_cache_specs(cfg: ModelConfig | None = None) -> Params:
     return base
 
 
+def paged_kv_pool_specs(cfg: ModelConfig | None = None) -> Params:
+    """Shardings for :func:`init_paged_kv_pool` leaves (rows, kv_heads, hd):
+    kv-heads shard over TP like the dense cache; the physical-row axis stays
+    replicated — rows are addressed by the host-side page table, which must
+    see every row on every shard."""
+    base = {"k": P(None, TP, None), "v": P(None, TP, None)}
+    if cfg is not None and cfg.kv_int8:
+        base["k_scale"] = P(None, TP)
+        base["v_scale"] = P(None, TP)
+    return base
+
+
 # ---------------------------------------------------------------------------
 # MLP (SwiGLU / GeGLU)
 # ---------------------------------------------------------------------------

@@ -232,6 +232,12 @@ def init_paged_cache(cfg: ModelConfig, slots: int, rows: int, max_seq: int,
     return init_cache(cfg, slots, max_seq, tp, dtype)
 
 
+def paged_cache_specs(cfg: ModelConfig) -> Params:
+    """Same layout as the dense cache (the paged cache IS the dense cache),
+    so the same shardings: heads shard over TP, slots stay replicated."""
+    return cache_specs(cfg)
+
+
 def paged_slot_axes(cfg: ModelConfig) -> Params:
     """No pooled leaves: every leaf is per-slot, exactly as in
     :func:`cache_slot_axes`."""

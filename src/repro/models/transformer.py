@@ -325,6 +325,20 @@ def init_paged_cache(cfg: ModelConfig, slots: int, rows: int, max_seq: int,
     return {"all": pool(cfg.n_layers)}
 
 
+def paged_cache_specs(cfg: ModelConfig) -> Params:
+    """Shardings mirroring :func:`init_paged_cache`: pool leaves gain the
+    layer axis over the kv-pool specs; gemma2 local rings reuse the dense
+    per-slot specs."""
+    def stacked(tree):
+        return jax.tree_util.tree_map(
+            lambda s: P(None, *s), tree, is_leaf=lambda x: isinstance(x, P))
+
+    pool = stacked(L.paged_kv_pool_specs(cfg))
+    if cfg.alt_local_global:
+        return {"local": stacked(L.kv_cache_specs(cfg)), "global": pool}
+    return {"all": pool}
+
+
 def paged_slot_axes(cfg: ModelConfig) -> Params:
     """Scatter map for the paged cache: ``"pool"`` marks leaves living in
     the shared physical pool (written through page-table rows); ints are

@@ -290,6 +290,19 @@ def init_paged_cache(cfg: ModelConfig, slots: int, rows: int, max_seq: int,
     }
 
 
+def paged_cache_specs(cfg: ModelConfig) -> Params:
+    """Shardings mirroring :func:`init_paged_cache`: per-slot conv/SSD
+    states keep their dense specs (minus the layer axis, plus the group
+    axes); the pooled attention KV gains the group axis over the kv-pool
+    specs."""
+    pool = jax.tree_util.tree_map(
+        lambda s: P(None, *s), L.paged_kv_pool_specs(cfg),
+        is_leaf=lambda x: isinstance(x, P))
+    return {"conv": P(None, None, L.BATCH_AXES, None, L.TP),
+            "ssd": P(None, None, L.BATCH_AXES, L.TP, None, None),
+            "attn": pool}
+
+
 def paged_slot_axes(cfg: ModelConfig) -> Params:
     """Scatter map for the paged cache: ``"pool"`` marks pooled KV leaves,
     ints the slot-axis of per-slot recurrent leaves."""

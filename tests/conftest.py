@@ -8,3 +8,14 @@ if str(SRC) not in sys.path:
 
 # NOTE: no --xla_force_host_platform_device_count here — smoke tests and
 # benches must see the real (single) device; only launch/dryrun.py widens it.
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_activation_context():
+    # the activation-sharding context is process state; a test that installs
+    # a spec must never leak it into the next test
+    yield
+    from repro.distributed import context
+    context.reset()

@@ -1,0 +1,119 @@
+"""Tensor-parallel dimension of the cost model and the codesign space.
+
+``HWConfig.tp`` replicates the chip: peak compute and aggregate HBM scale
+with the degree, area/static power scale with the chip count, and every
+interface call pays a ring all-reduce of its partial outputs over
+``Target.link_gbps``.  tp=1 must leave every number bit-identical to the
+single-chip model (the seeded goldens enforce that side)."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import workloads as W
+from repro.core.codesign import codesign
+from repro.core.cost_model import (SPATIAL, _evaluate_reference,
+                                   evaluate_batch_reports)
+from repro.core.hw_primitives import HWBuilder, HWConfig
+from repro.core.hw_space import PARALLELISM_AXES, HWSpace
+from repro.core.intrinsics import ALL_INTRINSICS
+from repro.core.matching import match
+from repro.core.sw_space import SoftwareSpace
+
+REPORT_FIELDS = ("latency_s", "energy_j", "power_w", "area_um2", "flops",
+                 "useful_flops", "hbm_bytes", "compute_s", "memory_s")
+
+
+def _tp_space(intrinsic: str) -> HWSpace:
+    base = HWSpace(intrinsic)
+    return HWSpace(intrinsic, axes={**base.axes, **PARALLELISM_AXES})
+
+
+def _population(wl, intrinsic, n, seed, n_hw=8):
+    rng = np.random.default_rng(seed)
+    choices = match(ALL_INTRINSICS[intrinsic], wl)
+    hws = _tp_space(intrinsic).sample(rng, n_hw)
+    assert len({h.tp for h in hws}) > 1, "population must mix TP degrees"
+    space = SoftwareSpace(wl, choices, hws[0], "spatial")
+    schedules = [space.random_schedule(rng) for _ in range(n)]
+    hw_list = [hws[int(rng.integers(len(hws)))] for _ in range(n)]
+    return hw_list, schedules
+
+
+def _legal_schedule(wl, hw, seed=0):
+    rng = np.random.default_rng(seed)
+    choices = match(ALL_INTRINSICS[hw.intrinsic], wl)
+    space = SoftwareSpace(wl, choices, hw, "spatial")
+    for _ in range(64):
+        s = space.random_schedule(rng)
+        if math.isfinite(_evaluate_reference(wl, s, hw, "spatial").latency_s):
+            return s
+    raise AssertionError("no legal schedule found")
+
+
+def test_hwconfig_tp_field():
+    hw = HWBuilder("GEMM").reshapeArray([128, 128]).parallelize(4).build()
+    assert hw.tp == 4
+    assert hw.encode()[-1] == 4
+    assert HWConfig().tp == 1
+    with pytest.raises(ValueError):
+        HWConfig(tp=0)
+
+
+@pytest.mark.parametrize("target", ["spatial", "tpu"])
+def test_tp_batch_matches_scalar_on_random_populations(target):
+    """The scalar/batch parity contract extends to mixed-TP populations."""
+    wl = W.gemm(512, 256, 128)
+    hw_list, schedules = _population(wl, "GEMM", 96, seed=0)
+    reports = evaluate_batch_reports(wl, hw_list, schedules, target)
+    for i, (s, h) in enumerate(zip(schedules, hw_list)):
+        ref = _evaluate_reference(wl, s, h, target)
+        got = reports[i]
+        for f in REPORT_FIELDS:
+            a, b = getattr(ref, f), getattr(got, f)
+            if math.isfinite(a) or math.isfinite(b):
+                assert b == pytest.approx(a, rel=1e-9), \
+                    f"tp={h.tp}[{i}]: {f} {a} != {b}"
+            else:
+                assert math.isinf(a) and math.isinf(b), f"[{i}]: {f}"
+        assert ref.legal == got.legal
+
+
+def test_tp_scales_area_and_charges_the_link():
+    """tp=8 costs 8x the silicon; whether it *helps* latency depends
+    entirely on the interconnect: a near-free link makes the 8-way chip
+    faster, a dead-slow link makes the all-reduce dominate."""
+    wl = W.gemm(1024, 512, 256)
+    hw1 = HWConfig(intrinsic="GEMM")
+    hw8 = dataclasses.replace(hw1, tp=8)
+    s = _legal_schedule(wl, hw1)
+
+    r1 = _evaluate_reference(wl, s, hw1, SPATIAL)
+    r8 = _evaluate_reference(wl, s, hw8, SPATIAL)
+    assert r8.area_um2 == pytest.approx(8 * r1.area_um2)
+
+    fast = dataclasses.replace(SPATIAL, link_gbps=1e9)
+    slow = dataclasses.replace(SPATIAL, link_gbps=1e-6)
+    assert _evaluate_reference(wl, s, hw8, fast).latency_s \
+        < _evaluate_reference(wl, s, hw1, fast).latency_s
+    assert _evaluate_reference(wl, s, hw8, slow).latency_s \
+        > _evaluate_reference(wl, s, hw1, slow).latency_s
+    # tp=1 never touches the link: link bandwidth cannot change its cost
+    assert _evaluate_reference(wl, s, hw1, slow).latency_s \
+        == _evaluate_reference(wl, s, hw1, fast).latency_s
+
+
+def test_codesign_tp_aware_commits_different_solution():
+    """The acceptance gate: the same seeded search over (chip × TP degree)
+    must commit a different, TP-aware solution than the TP-blind search —
+    the interconnect term is what lets it trade chips for latency."""
+    wl = W.table1_gemm()[:2]
+    kw = dict(intrinsics=["GEMM"], n_trials=8, n_init=4, seed=0, q=2)
+    blind = codesign(wl, **kw).solution
+    aware = codesign(wl, space_axes=PARALLELISM_AXES, **kw).solution
+    assert blind is not None and aware is not None
+    assert blind.hw.tp == 1                    # tp is opt-in: default space
+    assert aware.hw.tp > 1
+    assert aware.hw.encode() != blind.hw.encode()
+    assert aware.latency_s < blind.latency_s
