@@ -1,0 +1,30 @@
+"""Static legality, sharding, and hot-path analysis (DESIGN.md §16).
+
+Four analyzers share one typed :class:`~repro.analysis.findings.Finding`
+schema and a common rule catalog:
+
+  legality       static (HWConfig, Schedule, TensorizeChoice) verifier
+                 mirroring the cost model's feasibility rules — the tuner's
+                 pre-lowering gate (``error_type="Illegal"``)
+  jaxpr_audit    trace the jitted serve/train hot paths and flag host
+                 callbacks, closure-captured state, recompile hazards, and
+                 missed donations
+  sharding_lint  validate each family's PartitionSpec trees against real
+                 (eval_shape) shapes and a target mesh
+  kv_sanitizer   checkable model of the paged-KV page-table/allocator
+                 invariants; per-tick engine assertion + trace replay
+
+``python -m repro.analysis`` lints the shipped configs/meshes plus the
+golden codesign schedule and exits non-zero on error-severity findings
+(the CI ``analysis-lint`` gate).  Submodules import lazily where they need
+jax; ``findings``/``legality``/``kv_sanitizer`` stay import-light so the
+tuner measurement path can use them unconditionally.
+"""
+from . import findings
+from .findings import (RULES, SEVERITIES, Finding, errors, max_severity,
+                       rule, summarize, to_json, warnings)
+
+__all__ = [
+    "findings", "RULES", "SEVERITIES", "Finding", "errors", "max_severity",
+    "rule", "summarize", "to_json", "warnings",
+]

@@ -1,0 +1,205 @@
+"""Sharding lint (DESIGN.md §16.4).
+
+Validates each model family's declared PartitionSpec trees —
+``specs()`` / ``cache_specs()`` / ``paged_cache_specs()`` — against the
+*real* array shapes the family initializers produce (via ``jax.eval_shape``,
+so a 67B config lints in milliseconds without allocating a byte) and
+against a target mesh described as a plain ``{axis: size}`` dict (no
+devices needed):
+
+  * every axis named by a spec must be a known logical axis
+    ('pod' | 'data' | 'model');
+  * specs must structurally match the init tree and never exceed a leaf's
+    rank or name the same mesh axis twice;
+  * every dim sharded over mesh axes must be divisible by their product at
+    the tensor-parallel padding the mesh implies (``tp = mesh['model']``);
+  * large parameter leaves whose spec prunes to fully-replicated on a
+    multi-device mesh are flagged (the silent memory cliff);
+  * pooled paged-KV leaves must keep the physical-row axis replicated (the
+    host-side page table addresses rows on every shard) and must not carry
+    batch axes at all — pool rows are shared across slots, so
+    batch-sharding them is meaningless.
+
+``lint_config`` is the per-(config, mesh) entry the CLI and CI gate loop
+over; a clean shipped config returns no error-severity findings.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+from .findings import Finding, rule
+
+R_UNKNOWN_AXIS = rule(
+    "sharding/unknown-axis",
+    "spec names a mesh axis outside the logical axis set (pod/data/model): "
+    "it will never match any production mesh and silently replicates")
+R_RANK = rule(
+    "sharding/rank-mismatch",
+    "spec has more entries than the leaf has dims")
+R_TREE = rule(
+    "sharding/tree-mismatch",
+    "spec tree structure differs from the init tree it must annotate")
+R_DUP_AXIS = rule(
+    "sharding/duplicate-axis",
+    "the same mesh axis appears twice in one spec")
+R_INDIVISIBLE = rule(
+    "sharding/indivisible-dim",
+    "a sharded dim is not divisible by the product of its mesh axis sizes")
+R_REPLICATED = rule(
+    "sharding/fully-replicated",
+    "a large parameter leaf prunes to fully-replicated on this mesh: every "
+    "device holds a whole copy")
+R_POOL_ROWS = rule(
+    "sharding/pool-rows-sharded",
+    "paged-KV pool physical-row axis is sharded: the page table must "
+    "address every row on every shard")
+R_POOL_BATCH = rule(
+    "sharding/pool-batch-axis",
+    "paged-KV pool leaf sharded over a batch axis: pool rows are shared "
+    "across slots, batch-sharding them is meaningless")
+
+KNOWN_AXES = ("pod", "data", "model")
+
+#: A replicated param leaf bigger than this on a >1-device mesh is flagged.
+_REPLICATE_WARN_BYTES = 8 << 20
+
+
+def _entry_axes(entry) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def _flatten_specs(tree):
+    import jax
+    from jax.sharding import PartitionSpec as P
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def lint_tree(specs_tree, shape_tree, mesh_axes: dict[str, int] | None, *,
+              site: str, warn_replicated: bool = False,
+              pool_axes=None) -> list[Finding]:
+    """Check one spec tree against the matching tree of array shapes.
+
+    ``mesh_axes`` is ``{axis_name: size}`` (None = linting off-mesh: only
+    structural and axis-name rules apply).  ``pool_axes`` is the family's
+    ``paged_slot_axes`` tree; leaves marked ``"pool"`` get the pooled-KV
+    rules.
+    """
+    import jax
+
+    mesh = mesh_axes or {}
+    spec_leaves, spec_def = _flatten_specs(specs_tree)
+    shape_leaves, shape_def = jax.tree_util.tree_flatten_with_path(shape_tree)
+    out: list[Finding] = []
+    if len(spec_leaves) != len(shape_leaves) or \
+            [p for p, _ in spec_leaves] != [p for p, _ in shape_leaves]:
+        out.append(Finding(
+            "error", R_TREE, site,
+            f"spec tree ({len(spec_leaves)} leaves) does not match the init "
+            f"tree ({len(shape_leaves)} leaves)"))
+        return out
+    pool_flags = [None] * len(spec_leaves)
+    if pool_axes is not None:
+        pl, _ = jax.tree_util.tree_flatten(pool_axes)
+        if len(pl) == len(spec_leaves):
+            pool_flags = pl
+
+    for (path, spec), (_, leaf), marker in zip(spec_leaves, shape_leaves,
+                                               pool_flags):
+        where = site + jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        entries = tuple(spec)
+        if len(entries) > len(shape):
+            out.append(Finding("error", R_RANK, where,
+                               f"spec {spec} has {len(entries)} entries for "
+                               f"a rank-{len(shape)} leaf {list(shape)}"))
+            continue
+        seen: set[str] = set()
+        bad = False
+        for d, entry in enumerate(entries):
+            for a in _entry_axes(entry):
+                if a not in KNOWN_AXES:
+                    out.append(Finding(
+                        "error", R_UNKNOWN_AXIS, where,
+                        f"dim {d} names unknown axis {a!r} (known: "
+                        f"{'/'.join(KNOWN_AXES)})"))
+                    bad = True
+                elif a in seen:
+                    out.append(Finding("error", R_DUP_AXIS, where,
+                                       f"axis {a!r} appears twice in {spec}"))
+                    bad = True
+                seen.add(a)
+        if bad:
+            continue
+        sharded = False
+        for d, entry in enumerate(entries):
+            div = math.prod(mesh.get(a, 1) for a in _entry_axes(entry))
+            if div > 1:
+                sharded = True
+                if shape[d] % div:
+                    out.append(Finding(
+                        "error", R_INDIVISIBLE, where,
+                        f"dim {d} of size {shape[d]} not divisible by "
+                        f"{div} (axes {_entry_axes(entry)} on mesh "
+                        f"{mesh})"))
+        nbytes = math.prod(shape) * leaf.dtype.itemsize
+        if warn_replicated and not sharded and mesh and \
+                max(mesh.values()) > 1 and nbytes >= _REPLICATE_WARN_BYTES:
+            out.append(Finding(
+                "warning", R_REPLICATED, where,
+                f"{nbytes >> 20} MiB leaf replicated on every device of "
+                f"mesh {mesh}"))
+        if marker == "pool":
+            if len(entries) > 1 and entries[1] is not None:
+                out.append(Finding(
+                    "error", R_POOL_ROWS, where,
+                    f"physical-row axis (dim 1) sharded as "
+                    f"{entries[1]!r} in {spec}"))
+            batch = [a for e in entries for a in _entry_axes(e)
+                     if a in ("pod", "data")]
+            if batch:
+                out.append(Finding(
+                    "error", R_POOL_BATCH, where,
+                    f"pool leaf carries batch axis(es) {batch} in {spec}"))
+    return out
+
+
+def lint_config(cfg, mesh_axes: dict[str, int] | None = None, *,
+                slots: int = 4, max_seq: int = 64) -> list[Finding]:
+    """Lint one model config's param/cache/paged-cache specs against a mesh
+    (``{axis: size}``; None = single device).  Shapes come from
+    ``jax.eval_shape`` over the real initializers at the mesh's TP degree,
+    so padding/divisibility is checked exactly as serving would see it.
+    """
+    import jax
+
+    from repro.models import family_module
+
+    mod = family_module(cfg)
+    tp = (mesh_axes or {}).get("model", 1)
+    key = jax.random.PRNGKey(0)
+    out: list[Finding] = []
+
+    params = jax.eval_shape(functools.partial(mod.init, cfg, tp=tp), key)
+    out += lint_tree(mod.specs(cfg), params, mesh_axes,
+                     site=f"{cfg.name}/params", warn_replicated=True)
+
+    if cfg.embed_inputs:     # encoder-only: no serving caches to lint
+        return out
+
+    cache = jax.eval_shape(
+        functools.partial(mod.init_cache, cfg, slots, max_seq, tp))
+    out += lint_tree(mod.cache_specs(cfg), cache, mesh_axes,
+                     site=f"{cfg.name}/cache")
+
+    rows = slots * max_seq
+    paged = jax.eval_shape(
+        functools.partial(mod.init_paged_cache, cfg, slots, rows, max_seq,
+                          tp))
+    out += lint_tree(mod.paged_cache_specs(cfg), paged, mesh_axes,
+                     site=f"{cfg.name}/paged_cache",
+                     pool_axes=mod.paged_slot_axes(cfg))
+    return out

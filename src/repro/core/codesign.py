@@ -459,7 +459,7 @@ def _measure_rerank(workloads, partition, res: DSEResult,
 
     best_sol: Solution | None = None
     best_rank: tuple[int, float] | None = None
-    n_measured = n_fallback = n_quarantined = 0
+    n_measured = n_fallback = n_quarantined = n_illegal = 0
     for i in cand_idx:
         hw, y = res.configs[i], res.ys[i]
         results = sw_dse.optimize_set(workloads, partition, hw, target=target,
@@ -483,6 +483,12 @@ def _measure_rerank(workloads, partition, res: DSEResult,
                 cand_fallbacks += 1
                 if mres.error_type == "Quarantined":
                     n_quarantined += 1   # skipped unrun, not a new failure
+                elif mres.error_type == "Illegal":
+                    # statically rejected by the legality verifier ahead of
+                    # lowering (DESIGN.md §16.2): counted, but never recorded
+                    # as a failure — no kernel ever ran, so there is nothing
+                    # to retry or quarantine
+                    n_illegal += 1
                 elif mres.error:
                     measure_failures.append({
                         "workload": w.name, "intrinsic": intrinsic,
@@ -505,6 +511,7 @@ def _measure_rerank(workloads, partition, res: DSEResult,
             best_sol, best_rank = sol, rank
     summary = {"candidates": len(cand_idx), "measured": n_measured,
                "fallbacks": n_fallback, "quarantined": n_quarantined,
+               "illegal": n_illegal,
                "best_measured_total_s":
                    best_sol.latency_s if best_sol else math.inf,
                # True when the committed candidate's total mixes analytical

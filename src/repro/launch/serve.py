@@ -582,7 +582,8 @@ class PagedServeEngine:
                  prefill_chunk: int = 16, tp: int = 1, impl: str = "xla",
                  max_concurrency: int | None = None, mesh=None,
                  age_steps: int = 32,
-                 clock=time.monotonic, stall_limit: int = 256):
+                 clock=time.monotonic, stall_limit: int = 256,
+                 sanitize: bool = False):
         if cfg.embed_inputs:
             raise ValueError(f"{cfg.name} is encoder-only: no decode loop "
                              f"(DESIGN.md §5)")
@@ -623,6 +624,9 @@ class PagedServeEngine:
         self._suspended: dict[int, tuple[int, object]] = {}   # rid -> swap
         self.clock = clock
         self.stall_limit = stall_limit
+        # debug mode: re-check the page-table/allocator invariants after
+        # every tick (repro.analysis.kv_sanitizer; raises PagedStateError)
+        self.sanitize = sanitize
         self.terminal: list[Request] = []   # degraded terminals, undrained
         self.decode_steps = 0
         self.prefill_tokens = 0
@@ -1025,6 +1029,9 @@ class PagedServeEngine:
             m.gauge("serve.pages_free").set(self.alloc.n_free)
             m.gauge("serve.slots_active").set(self.scheduler.n_active)
             m.gauge("serve.waiting").set(self.scheduler.n_waiting)
+        if self.sanitize:
+            from repro.analysis.kv_sanitizer import assert_engine
+            assert_engine(self, site=f"tick{self.decode_steps}")
         return finished
 
     def run(self) -> list[Request]:
@@ -1103,7 +1110,7 @@ def serve_requests(cfg, params, requests, *, slots: int = 4,
                    max_concurrency: int | None = None, paged: bool = False,
                    page_size: int = 8, n_pages: int | None = None,
                    prefill_chunk: int = 16, age_steps: int = 32,
-                   stall_limit: int = 256, mesh=None
+                   stall_limit: int = 256, mesh=None, sanitize: bool = False
                    ) -> tuple[list[Request], dict]:
     """Convenience wrapper: submit ``requests``, drain the engine, return
     ``(requests, stats)`` — every submitted request comes back with a
@@ -1118,7 +1125,8 @@ def serve_requests(cfg, params, requests, *, slots: int = 4,
             cfg, params, slots=slots, max_seq=max_seq, tp=tp, impl=impl,
             max_concurrency=max_concurrency, page_size=page_size,
             n_pages=n_pages, prefill_chunk=prefill_chunk,
-            age_steps=age_steps, stall_limit=stall_limit, mesh=mesh)
+            age_steps=age_steps, stall_limit=stall_limit, mesh=mesh,
+            sanitize=sanitize)
     else:
         eng = ServeEngine(cfg, params, slots=slots, max_seq=max_seq, tp=tp,
                           impl=impl, max_concurrency=max_concurrency,
@@ -1200,6 +1208,10 @@ def main() -> None:
                          "equivalent capacity)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="prompt tokens prefetched per engine step (paged)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug mode: assert the paged page-table/allocator "
+                         "invariants after every engine tick "
+                         "(repro.analysis.kv_sanitizer)")
     ap.add_argument("--mesh", default=None, metavar="data=D,model=T",
                     help="serve tensor-parallel over a device mesh, e.g. "
                          "data=1,model=8 (product must equal the host "
@@ -1289,7 +1301,8 @@ def main() -> None:
         tp=tp, mesh=mesh,
         max_concurrency=1 if args.sequential else None, paged=args.paged,
         page_size=args.page_size, n_pages=args.pages,
-        prefill_chunk=args.prefill_chunk, stall_limit=args.stall_limit)
+        prefill_chunk=args.prefill_chunk, stall_limit=args.stall_limit,
+        sanitize=args.sanitize and args.paged)
     dt = time.time() - t0
     for req in done:
         tail = "" if req.status == "OK" else f"  [{req.status}]"

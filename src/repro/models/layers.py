@@ -364,8 +364,10 @@ def moe_init(key, cfg: ModelConfig, tp: int, dtype) -> Params:
     pd = cfg.padded(tp)
     e, d, f = pd.n_experts, cfg.d_model, cfg.moe_d_ff
     ks = jax.random.split(key, 4)
-    # padded experts are routed -inf -> never selected (exact)
-    mask = jnp.where(jnp.arange(e) < cfg.n_experts, 0.0, -1e30)
+    # padded experts are routed -inf -> never selected (exact); strong f32
+    # so the aval matches a checkpoint round-trip (no weak-type cache split)
+    mask = jnp.where(jnp.arange(e) < cfg.n_experts, 0.0, -1e30) \
+        .astype(jnp.float32)
     return {
         "router": _normal(ks[0], (d, e), d ** -0.5, jnp.float32),
         "router_mask": mask,

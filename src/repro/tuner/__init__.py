@@ -20,12 +20,12 @@ from . import calibrate, db, measure
 from .calibrate import CalibratedCostModel, Calibration, fit, spearman
 from .db import DEFAULT_DB_PATH, TuningDB, TuningRecord
 from .measure import (KernelPoint, MeasureOptions, MeasureResult, classify,
-                      measure_batch, measure_one)
+                      measure_batch, measure_one, summarize_batch)
 
 __all__ = [
     "calibrate", "db", "measure",
     "CalibratedCostModel", "Calibration", "fit", "spearman",
     "DEFAULT_DB_PATH", "TuningDB", "TuningRecord",
     "KernelPoint", "MeasureOptions", "MeasureResult", "classify",
-    "measure_batch", "measure_one",
+    "measure_batch", "measure_one", "summarize_batch",
 ]

@@ -126,9 +126,11 @@ def main(argv: list[str] | None = None) -> int:
             if s.get("best_has_fallbacks") else ""
         quarantined = s.get("quarantined", 0)
         qnote = f", {quarantined} quarantined skipped" if quarantined else ""
+        illegal = s.get("illegal", 0)
+        inote = f", {illegal} statically illegal skipped" if illegal else ""
         print(f"  {intr}: measured {s['measured']} kernel points over "
               f"{s['candidates']} candidates ({s['fallbacks']} analytical "
-              f"fallbacks{qnote}), best total "
+              f"fallbacks{qnote}{inote}), best total "
               f"{s['best_measured_total_s'] * 1e3:.3f} ms{mixed}")
     if report.calibration is not None:
         for op, corr in report.calibration.corrections.items():

@@ -27,6 +27,12 @@ data for the explorer, not exceptions.  Robustness (DESIGN.md §14): kernel
 *timing* failures — transient by nature, unlike structural lowering errors —
 are retried with capped exponential backoff, and candidates quarantined by
 the tuning DB's failure history are skipped without burning wall clock.
+
+Statically-illegal candidates (DESIGN.md §16.2) never reach lowering at
+all: the ``repro.analysis`` legality verifier runs ahead of ``lower`` and
+candidates it rejects come back as ``error_type="Illegal"`` — never timed,
+never retried, never quarantined (they carry no kernel point), so the
+measurement budget goes only to candidates that can work.
 """
 from __future__ import annotations
 
@@ -302,6 +308,35 @@ def _fail_result(e: Exception, point: KernelPoint | None,
                          error_type=type(e).__name__)
 
 
+def _static_illegal(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
+                    opts: MeasureOptions) -> list:
+    """Error-severity legality findings for a candidate, or [] when the
+    static verifier has nothing gating to say.  A choice matched against a
+    *different* workload is left for :func:`lower` to reject (its
+    'no kernel lowering' ValueError is load-bearing failure-capture data),
+    as is the max_block_elems volume cap."""
+    if schedule.choice.workload_name != workload.name:
+        return []
+    from repro.analysis.findings import errors
+    from repro.analysis.legality import verify_candidate
+    return errors(verify_candidate(workload, schedule, hw,
+                                   max_block_elems=opts.max_block_elems))
+
+
+def _illegal_result(findings: list, workload: TensorExpr) -> MeasureResult:
+    """Skip a statically-illegal candidate unrun: inf latency, the firing
+    rule ids in the error string, ``error_type="Illegal"`` and no kernel
+    point — so it can never be retried or quarantined."""
+    st = obs.state()
+    if st is not None:
+        st.metrics.counter("tuner.illegal_skips").inc()
+        st.tracer.instant("tuner.illegal_skip",
+                          {"workload": workload.name,
+                           "rule": findings[0].rule})
+    detail = "; ".join(f"{f.rule}: {f.detail}" for f in findings[:3])
+    return MeasureResult(math.inf, (), None, detail, error_type="Illegal")
+
+
 def _quarantined_result(point: KernelPoint,
                         workload: TensorExpr) -> MeasureResult:
     """Skip a candidate the tuning DB has quarantined: inf latency with a
@@ -327,6 +362,9 @@ def measure_one(workload: TensorExpr, hw: HWConfig, schedule: Schedule,
     with obs.span("tuner.measure",
                   {"workload": workload.name, "backend": opts.backend}
                   if obs.enabled() else None):
+        bad = _static_illegal(workload, hw, schedule, opts)
+        if bad:
+            return _illegal_result(bad, workload)
         t0 = time.perf_counter()
         try:
             point, thunk = lower(workload, hw, schedule, opts)
@@ -356,7 +394,10 @@ def measure_batch(workload: TensorExpr,
     that pad to the same block shape); each distinct point is compiled and
     timed once and its result shared — the batched analogue of the cost
     model's EvalCache, but for wall-clock measurements.  Candidates whose
-    :func:`quarantine_key` is in ``quarantine`` are skipped unrun.
+    :func:`quarantine_key` is in ``quarantine`` are skipped unrun, as are
+    statically-illegal candidates (``error_type="Illegal"``);
+    :func:`summarize_batch` counts both skip classes alongside the dedup
+    statistics.
     """
     opts = opts or MeasureOptions()
     schedules = list(schedules)
@@ -376,6 +417,10 @@ def measure_batch(workload: TensorExpr,
         with obs.span("tuner.measure",
                       {"workload": workload.name, "backend": opts.backend}
                       if obs.enabled() else None):
+            bad = _static_illegal(workload, hw, sched, opts)
+            if bad:
+                out.append(_illegal_result(bad, workload))
+                continue
             t0 = time.perf_counter()
             try:
                 point, thunk = lower(workload, hw, sched, opts)
@@ -401,3 +446,22 @@ def measure_batch(workload: TensorExpr,
                 memo[point] = res
             out.append(res)
     return out
+
+
+def summarize_batch(results: Sequence[MeasureResult]) -> dict:
+    """Skip/dedup accounting for one :func:`measure_batch` population:
+    how many candidates were actually timed vs served from the dedup memo,
+    skipped as statically illegal, skipped as quarantined, or failed."""
+    n_ok = sum(r.ok for r in results)
+    n_illegal = sum(r.error_type == "Illegal" for r in results)
+    n_quarantined = sum(r.error_type == "Quarantined" for r in results)
+    unique = len({r.point for r in results if r.point is not None})
+    return {
+        "candidates": len(results),
+        "measured": n_ok,
+        "unique_points": unique,
+        "deduped": sum(r.point is not None for r in results) - unique,
+        "illegal": n_illegal,
+        "quarantined": n_quarantined,
+        "failed": len(results) - n_ok - n_illegal - n_quarantined,
+    }

@@ -1,0 +1,253 @@
+"""Paged-KV aliasing sanitizer (repro.analysis.kv_sanitizer, DESIGN.md §16.5).
+
+  * seeded corruptions — every invariant the sanitizer models is broken
+    explicitly (double-mapped row, leaked page, −1 wrap hazard, free∧held,
+    foreign pages/rows, range violations) and must fire its exact rule id;
+  * randomized trace replay — valid alloc/map/release/resume interleavings
+    through :class:`TraceChecker` stay clean (deterministic tier always
+    runs; hypothesis widens the seed space on CI, mirroring
+    test_paged_kv.py);
+  * live engine integration — a paged serve run under ``sanitize=True``
+    completes with the per-tick assertion armed, and corrupting the live
+    engine's page table makes the next tick raise :class:`PagedStateError`
+    with the right rule.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import kv_sanitizer as kv
+from repro.analysis.findings import errors
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover - CI has it
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# seeded corruptions against a known-good snapshot
+# ---------------------------------------------------------------------------
+
+def _state():
+    """A valid 2-slot snapshot: slot0 holds pages {0,1} with rows 0..3
+    mapped at pos 3; slot1 holds page {2} with rows 4,5 at pos 2; page 3
+    free."""
+    return dict(
+        row_map=np.array([[0, 1, 2, 3], [4, 5, -1, -1]], np.int32),
+        pos=np.array([3, 2]),
+        pages=[[0, 1], [2]],
+        n_pages=4, page_size=2,
+        free_pages={3}, held_pages={0, 1, 2}, max_seq=4)
+
+
+def _check(**over):
+    s = _state()
+    s.update(over)
+    return kv.check_paged_state(
+        s["row_map"], s["pos"], s["pages"], n_pages=s["n_pages"],
+        page_size=s["page_size"], free_pages=s["free_pages"],
+        held_pages=s["held_pages"], max_seq=s["max_seq"])
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def test_valid_state_is_clean():
+    assert _check() == []
+
+
+def test_double_mapped_row():
+    rm = _state()["row_map"]
+    rm[1, 0] = 1          # slot1 claims slot0's physical row 1
+    got = _check(row_map=rm)
+    assert "kv/row-double-owned" in _rules(got)
+
+
+def test_leaked_page():
+    got = _check(free_pages=set(), held_pages={0, 1, 2})
+    assert _rules(got) == {"kv/page-leak"}
+    assert any("page 3" in f.detail for f in got)
+
+
+def test_negative_row_wrap_hazard():
+    rm = _state()["row_map"]
+    rm[0, 1] = -2         # would WRAP under scatter mode='drop'
+    got = _check(row_map=rm)
+    assert "kv/negative-row" in _rules(got)
+
+
+def test_unmapped_row_below_write_position():
+    rm = _state()["row_map"]
+    rm[0, 1] = -1         # pos is 3: attention would read garbage at 1
+    got = _check(row_map=rm)
+    assert _rules(got) == {"kv/row-unmapped-live"}
+
+
+def test_page_free_and_held():
+    got = _check(free_pages={1, 3})
+    assert _rules(got) == {"kv/page-free-and-held"}
+
+
+def test_foreign_page():
+    got = _check(held_pages={0, 1})   # allocator forgot slot1's page 2
+    assert _rules(got) == {"kv/page-foreign"}
+
+
+def test_row_out_of_range():
+    rm = _state()["row_map"]
+    rm[0, 0] = 8          # pool is 4 pages x 2 rows = 8 rows (0..7)
+    got = _check(row_map=rm)
+    assert "kv/row-out-of-range" in _rules(got)
+
+
+def test_row_on_unheld_page():
+    rm = _state()["row_map"]
+    rm[1, 1] = 6          # row 6 lies on free page 3
+    got = _check(row_map=rm)
+    assert _rules(got) == {"kv/row-not-owned"}
+
+
+def test_page_double_owned():
+    got = _check(pages=[[0, 1], [1]], held_pages={0, 1},
+                 free_pages={2, 3})
+    assert "kv/page-double-owned" in _rules(got)
+
+
+def test_pos_out_of_range():
+    got = _check(pos=np.array([5, 2]))
+    assert "kv/pos-out-of-range" in _rules(got)
+
+
+def test_paged_state_error_message():
+    rm = _state()["row_map"]
+    rm[0, 1] = -2
+    bad = errors(_check(row_map=rm))
+    err = kv.PagedStateError(bad)
+    assert err.findings == bad and "kv/negative-row" in str(err)
+
+
+# ---------------------------------------------------------------------------
+# trace replay: randomized valid traces stay clean
+# ---------------------------------------------------------------------------
+
+def _random_trace(rng, n_ops=120):
+    """Generate a valid op sequence by simulating it on a scratch checker
+    (asserting every intermediate snapshot is clean)."""
+    tc = kv.TraceChecker(n_pages=8, page_size=2, slots=3, max_seq=6)
+    ops = []
+    for _ in range(n_ops):
+        s = int(rng.integers(tc.slots))
+        free = sorted(tc._free)
+        if tc._pages[s] and (rng.random() < 0.35 or not free):
+            op = {"op": "suspend" if rng.random() < 0.5 else "release",
+                  "slot": s}
+        elif free:
+            k = int(rng.integers(1, min(len(free), 3) + 1))
+            pages = [int(p) for p in rng.choice(free, size=k, replace=False)]
+            if tc._pages[s]:
+                op = {"op": "alloc", "slot": s, "pages": pages}
+            else:
+                op = {"op": "resume", "slot": s, "pages": pages,
+                      "rows": int(rng.integers(0, k * tc.page_size + 1))}
+        else:                                       # pragma: no cover
+            continue
+        ops.append(op)
+        assert tc.apply(dict(op)) == [], f"generator produced a bad op {op}"
+        if op["op"] in ("alloc", "resume") or tc._pages[s]:
+            rows = int(rng.integers(0, tc._capacity(s) + 1))
+            mop = {"op": "map", "slot": s, "rows": rows}
+            ops.append(mop)
+            assert tc.apply(dict(mop)) == []
+    return ops
+
+
+def _replay_clean(seed):
+    ops = _random_trace(np.random.default_rng(seed))
+    fresh = kv.TraceChecker(n_pages=8, page_size=2, slots=3, max_seq=6)
+    assert fresh.check_trace(ops) == []
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_trace_checker_random_clean(seed):
+    _replay_clean(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_trace_checker_random_clean_hypothesis(seed):
+        _replay_clean(seed)
+
+
+def test_trace_checker_catches_double_alloc():
+    tc = kv.TraceChecker(n_pages=4, page_size=2, slots=2, max_seq=4)
+    ops = [{"op": "alloc", "slot": 0, "pages": [0, 1]},
+           {"op": "map", "slot": 0, "rows": 3},
+           {"op": "alloc", "slot": 1, "pages": [1]},     # page 1 stolen
+           {"op": "map", "slot": 1, "rows": 1}]
+    got = tc.check_trace(ops)
+    bad = errors(got)
+    assert bad and bad[0].rule == "kv/page-double-owned"
+    assert bad[0].site.startswith("trace[2]:alloc")
+    # replay stops at the first corrupting op: op 3 is never reached
+    assert not any(f.site.startswith("trace[3]") for f in got)
+
+
+def test_trace_checker_rejects_unknown_op():
+    tc = kv.TraceChecker(n_pages=2, page_size=2, slots=1, max_seq=2)
+    with pytest.raises(ValueError):
+        tc.apply({"op": "warp", "slot": 0})
+
+
+# ---------------------------------------------------------------------------
+# live engine integration (sanitize=True debug mode)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.serve import PagedServeEngine, Request
+    from repro.models import family_module, reduced
+
+    cfg = reduced(get_config("qwen3-8b"))
+    params = family_module(cfg).init(cfg, jax.random.PRNGKey(0), 1)
+    return cfg, params, PagedServeEngine, Request
+
+
+def _engine(paged_setup, **kw):
+    cfg, params, PagedServeEngine, Request = paged_setup
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 16)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("n_pages", 8)
+    eng = PagedServeEngine(cfg, params, sanitize=True, **kw)
+    return eng, Request
+
+
+def test_engine_sanitized_run_completes(paged_setup):
+    eng, Request = _engine(paged_setup)
+    done = []
+    for i in range(4):
+        eng.submit(Request(i, [1, 2, 3], 4))
+    ticks = 0
+    while eng.scheduler.has_work() and ticks < 200:
+        done.extend(eng.step())   # asserts the paged state every tick
+        ticks += 1
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+
+
+def test_engine_corruption_trips_next_tick(paged_setup):
+    eng, Request = _engine(paged_setup)
+    eng.submit(Request(0, [1, 2, 3], 8))
+    eng.step()
+    live = int(np.argmax(eng.pos < eng.max_seq))
+    eng.row_map[live, 0] = -2                     # seed the wrap hazard
+    with pytest.raises(kv.PagedStateError) as ei:
+        for _ in range(4):
+            eng.step()
+    assert any(f.rule == "kv/negative-row" for f in ei.value.findings)

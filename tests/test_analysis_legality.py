@@ -1,0 +1,208 @@
+"""Static legality verifier (repro.analysis.legality, DESIGN.md §16.2).
+
+Three layers of assurance:
+
+  * seeded-defect coverage — every defect class the verifier claims to
+    catch is constructed explicitly (vmem overflow, intrinsic mismatch,
+    design-space-illegal hardware, semantically broken tensorize choices)
+    and must fire the *right* rule id;
+  * the zero-false-positive contract — on space-legal hardware populations
+    with sound matched choices, error-severity findings must agree exactly
+    with ``cost_model.evaluate(...).legal`` (the verifier mirrors the
+    reference evaluator's working-set formula line for line);
+  * the shipped surfaces — the golden codesign snapshot verifies clean and
+    the ``python -m repro.analysis`` CLI exits 0 over a shipped config,
+    writing the findings JSON artifact the CI gate uploads.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import Finding, errors, rule, summarize
+from repro.analysis.legality import is_legal, verify_candidate, verify_hw
+from repro.core import workloads as W
+from repro.core.cost_model import evaluate
+from repro.core.hw_primitives import HWConfig
+from repro.core.hw_space import HWSpace
+from repro.core.intrinsics import ALL_INTRINSICS, GEMM
+from repro.core.matching import match
+from repro.core.sw_primitives import Schedule
+
+
+@pytest.fixture
+def gemm64():
+    wl = W.gemm(64, 64, 64, name="g64")
+    return wl, match(GEMM, wl)[0]
+
+
+def _hw(rows=16, cols=16, depth=16, **kw):
+    kw.setdefault("vmem_kib", 2048)
+    return HWConfig(intrinsic="GEMM", pe_rows=rows, pe_cols=cols,
+                    pe_depth=depth, **kw)
+
+
+def _sched(wl, choice, tile):
+    tiles = tuple(sorted((c, tile) for c in choice.mapped_compute_indices))
+    return Schedule(choice, tiles, tuple(wl.all_indices()), 0)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# findings schema
+# ---------------------------------------------------------------------------
+
+def test_finding_schema():
+    f = Finding("error", "legality/vmem-overflow", "site", "boom")
+    assert f.to_dict() == {"severity": "error",
+                           "rule": "legality/vmem-overflow",
+                           "site": "site", "detail": "boom"}
+    assert "legality/vmem-overflow" in str(f)
+    with pytest.raises(ValueError):
+        Finding("fatal", "legality/vmem-overflow", "s", "d")
+    with pytest.raises(ValueError):
+        rule("no-family-slug", "rule ids are namespaced")
+    s = summarize([f])
+    assert s["error"] == 1 and s["warning"] == 0
+
+
+# ---------------------------------------------------------------------------
+# seeded defects: each class fires its rule
+# ---------------------------------------------------------------------------
+
+def test_clean_candidate_has_no_findings(gemm64):
+    wl, choice = gemm64
+    got = verify_candidate(wl, _sched(wl, choice, 32), _hw())
+    assert errors(got) == [] and is_legal(wl, _sched(wl, choice, 32), _hw())
+    # tile 32 on 16-blocks: aligned, in-range knobs -> not even warnings
+    assert got == []
+
+
+def test_vmem_overflow_matches_cost_model(gemm64):
+    wl, choice = gemm64
+    hw = _hw(vmem_kib=16)         # 16 KiB scratchpad
+    bad = _sched(wl, choice, 64)  # 49152 B working set
+    got = errors(verify_candidate(wl, bad, hw))
+    assert _rules(got) == {"legality/vmem-overflow"}
+    assert not evaluate(wl, bad, hw).legal
+    ok = _sched(wl, choice, 16)   # 3072 B: fits
+    assert is_legal(wl, ok, hw) and evaluate(wl, ok, hw).legal
+
+
+def test_intrinsic_mismatch(gemm64):
+    wl, choice = gemm64
+    hw = HWConfig(intrinsic="GEMV", pe_rows=16, pe_cols=16, pe_depth=16,
+                  vmem_kib=2048)
+    got = errors(verify_candidate(wl, _sched(wl, choice, 32), hw))
+    assert "legality/intrinsic-mismatch" in _rules(got)
+    assert not evaluate(wl, _sched(wl, choice, 32), hw).legal
+
+
+def test_unknown_intrinsic():
+    hw = HWConfig(intrinsic="FANCY", pe_rows=16, pe_cols=16, pe_depth=16)
+    assert _rules(errors(verify_hw(hw))) == {"legality/unknown-intrinsic"}
+
+
+def test_workload_mismatch(gemm64):
+    wl, choice = gemm64
+    other = W.gemm(32, 32, 32, name="other")
+    got = errors(verify_candidate(other, _sched(other, choice, 16), _hw()))
+    assert "legality/choice-workload-mismatch" in _rules(got)
+
+
+def test_broken_choice_accumulation_flag(gemm64):
+    wl, choice = gemm64
+    bad = dataclasses.replace(choice, accumulation=not choice.accumulation)
+    got = errors(verify_candidate(wl, _sched(wl, bad, 32), _hw()))
+    assert "legality/accumulation-flag" in _rules(got)
+
+
+def test_broken_choice_reduction_unsound(gemm64):
+    wl, choice = gemm64
+    intr_reduced = ALL_INTRINSICS["GEMM"].reduced
+    im = dict(choice.index_map)
+    red_q = next(q for q in im if q in intr_reduced)
+    im[red_q] = next(c for c in wl.all_indices() if c not in wl.reduced)
+    bad = dataclasses.replace(choice, index_map=tuple(im.items()))
+    got = errors(verify_candidate(wl, _sched(wl, bad, 32), _hw()))
+    assert "legality/reduction-unsound" in _rules(got)
+
+
+def test_hw_space_illegal_points():
+    # PE-local accumulator eats more than a quarter of VMEM
+    got = errors(verify_hw(_hw(vmem_kib=128, local_accum_kib=1024)))
+    assert _rules(got) == {"legality/local-accum-oversized"}
+    # one minimal (double-buffered) intrinsic tile cannot fit its own VMEM
+    got = errors(verify_hw(_hw(rows=512, cols=512, depth=512, vmem_kib=128)))
+    assert _rules(got) == {"legality/min-tile-overflow"}
+
+
+def test_misaligned_tile_warns_but_stays_legal(gemm64):
+    wl, choice = gemm64
+    got = verify_candidate(wl, _sched(wl, choice, 24), _hw())
+    assert errors(got) == []
+    assert "legality/tile-misaligned" in _rules(got)
+
+
+# ---------------------------------------------------------------------------
+# zero-false-positive contract: static == dynamic on random populations
+# ---------------------------------------------------------------------------
+
+def test_random_population_agrees_with_cost_model():
+    wl = W.gemm(96, 80, 72, name="gp")
+    choice = match(GEMM, wl)[0]
+    rng = np.random.default_rng(0)
+    checked = disagree = 0
+    for hw in HWSpace("GEMM").sample(rng, 20):
+        for tile in (8, 16, 48, 96):
+            sched = _sched(wl, choice, tile)
+            static = bool(errors(verify_candidate(wl, sched, hw)))
+            dynamic = not evaluate(wl, sched, hw).legal
+            checked += 1
+            disagree += static != dynamic
+    assert checked == 80 and disagree == 0
+
+
+# ---------------------------------------------------------------------------
+# shipped surfaces: golden snapshot + CLI gate
+# ---------------------------------------------------------------------------
+
+def test_golden_codesign_schedule_verifies_clean():
+    from repro.analysis.__main__ import GOLDEN_DEFAULT, golden_findings
+    assert GOLDEN_DEFAULT.exists()
+    got = golden_findings(GOLDEN_DEFAULT)
+    assert errors(got) == []
+    assert len(got) >= 1     # padding observations are expected warnings
+
+
+def test_cli_lints_shipped_config(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "findings.json"
+    rc = main(["--arch", "gemma2-2b", "--mesh", "none",
+               "--mesh", "data=2,model=4", "--json", str(out)])
+    assert rc == 0
+    snap = json.loads(out.read_text())
+    assert snap["errors"] == 0
+    assert {"summary", "errors", "findings"} <= set(snap)
+    assert "gemma2-2b" in capsys.readouterr().out
+
+
+def test_cli_rules_catalog(capsys):
+    from repro.analysis.__main__ import main
+    assert main(["--rules"]) == 0
+    text = capsys.readouterr().out
+    for rid in ("legality/vmem-overflow", "sharding/indivisible-dim",
+                "kv/row-double-owned", "jaxpr/host-callback"):
+        assert rid in text
+
+
+def test_cli_mesh_parsing():
+    from repro.analysis.__main__ import parse_mesh
+    assert parse_mesh("none") is None
+    assert parse_mesh("data=2,model=4") == {"data": 2, "model": 4}
+    with pytest.raises(SystemExit):
+        parse_mesh("data=two")

@@ -1,0 +1,125 @@
+"""Sharding lint (repro.analysis.sharding_lint, DESIGN.md §16.4).
+
+  * shipped configs lint clean — every family's ``specs()`` /
+    ``cache_specs()`` / ``paged_cache_specs()`` against the production
+    meshes, with shapes coming from ``jax.eval_shape`` over the real
+    initializers (the zero-false-positive half of the contract);
+  * seeded defects — every rule fires on a minimal hand-built (spec,
+    shape) tree: unknown axis, indivisible dim, rank/tree mismatch,
+    duplicate axis, sharded pool rows, batch axes on pool leaves, and the
+    full-replication memory-cliff warning.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.findings import errors, warnings
+from repro.analysis.sharding_lint import lint_config, lint_tree
+from repro.configs import ARCH_IDS, get_config
+
+MESHES = [None, {"data": 2, "model": 4}]
+
+# lint every family shape once; the CLI/CI gate covers the full matrix
+SMALL = ["qwen3-8b", "gemma2-2b", "granite-moe-3b-a800m", "rwkv6-3b",
+         "zamba2-2.7b", "hubert-xlarge", "internvl2-76b"]
+
+
+def _leaf(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# shipped configs are clean (no error-severity findings)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh", MESHES,
+                         ids=["no-mesh", "data2xmodel4"])
+@pytest.mark.parametrize("arch", SMALL)
+def test_shipped_config_lints_clean(arch, mesh):
+    got = lint_config(get_config(arch), mesh)
+    assert errors(got) == [], [str(f) for f in errors(got)]
+
+
+def test_all_arch_ids_resolve():
+    # the CI gate loops the full ARCH_IDS x MESHES matrix; make sure the
+    # subset above is not silently stale
+    assert set(SMALL) <= set(ARCH_IDS)
+
+
+# ---------------------------------------------------------------------------
+# seeded defects
+# ---------------------------------------------------------------------------
+
+def test_unknown_axis():
+    got = lint_tree({"w": P("tensor")}, {"w": _leaf(8, 8)},
+                    {"data": 2}, site="t")
+    assert _rules(errors(got)) == {"sharding/unknown-axis"}
+
+
+def test_indivisible_dim():
+    got = lint_tree({"w": P("model")}, {"w": _leaf(6, 8)},
+                    {"model": 4}, site="t")
+    assert _rules(errors(got)) == {"sharding/indivisible-dim"}
+    # same spec divides cleanly off-mesh and on model=2
+    assert lint_tree({"w": P("model")}, {"w": _leaf(6, 8)}, None,
+                     site="t") == []
+    assert lint_tree({"w": P("model")}, {"w": _leaf(6, 8)}, {"model": 2},
+                     site="t") == []
+
+
+def test_axis_tuple_product_divisibility():
+    spec = {"w": P(("pod", "data"), None)}
+    got = lint_tree(spec, {"w": _leaf(12, 4)}, {"pod": 2, "data": 4},
+                    site="t")
+    assert _rules(errors(got)) == {"sharding/indivisible-dim"}  # 12 % 8
+    assert lint_tree(spec, {"w": _leaf(16, 4)}, {"pod": 2, "data": 4},
+                     site="t") == []
+
+
+def test_rank_mismatch():
+    got = lint_tree({"w": P("model", None, None)}, {"w": _leaf(8)},
+                    None, site="t")
+    assert _rules(errors(got)) == {"sharding/rank-mismatch"}
+
+
+def test_duplicate_axis():
+    got = lint_tree({"w": P("data", "data")}, {"w": _leaf(8, 8)},
+                    {"data": 2}, site="t")
+    assert "sharding/duplicate-axis" in _rules(errors(got))
+
+
+def test_tree_mismatch():
+    got = lint_tree({"a": P()}, {"a": _leaf(4), "b": _leaf(4)},
+                    None, site="t")
+    assert _rules(errors(got)) == {"sharding/tree-mismatch"}
+
+
+def test_pool_rows_sharded():
+    got = lint_tree({"k": P(None, "model", None)}, {"k": _leaf(2, 8, 4)},
+                    {"model": 4}, site="t", pool_axes={"k": "pool"})
+    assert "sharding/pool-rows-sharded" in _rules(errors(got))
+
+
+def test_pool_batch_axis():
+    got = lint_tree({"k": P(None, None, "data")}, {"k": _leaf(2, 8, 4)},
+                    {"data": 2}, site="t", pool_axes={"k": "pool"})
+    assert "sharding/pool-batch-axis" in _rules(errors(got))
+
+
+def test_fully_replicated_warns_only_when_large_and_meshed():
+    big, small = _leaf(2048, 2048), _leaf(64, 64)      # 16 MiB vs 16 KiB
+    got = lint_tree({"w": P()}, {"w": big}, {"data": 2}, site="t",
+                    warn_replicated=True)
+    assert errors(got) == []
+    assert _rules(warnings(got)) == {"sharding/fully-replicated"}
+    # small leaves, single-device meshes, and cache trees stay silent
+    assert lint_tree({"w": P()}, {"w": small}, {"data": 2}, site="t",
+                     warn_replicated=True) == []
+    assert lint_tree({"w": P()}, {"w": big}, None, site="t",
+                     warn_replicated=True) == []
+    assert lint_tree({"w": P()}, {"w": big}, {"data": 2}, site="t") == []

@@ -80,6 +80,51 @@ def test_measure_batch_dedups_identical_lowerings(gemm64):
     assert out[2].point != out[0].point
 
 
+# ---------------------------------------------------------------------------
+# static legality gate (repro.analysis.legality ahead of lowering)
+# ---------------------------------------------------------------------------
+
+def test_measure_one_skips_statically_illegal(gemm64):
+    wl, choice = gemm64
+    hw = _hw(vmem_kib=16)                        # 16 KiB scratchpad
+    res = M.measure_one(wl, hw, _sched(wl, choice, 64))   # 48 KiB tiles
+    assert not res.ok and math.isinf(res.latency_s)
+    assert res.error_type == "Illegal"
+    assert res.point is None and res.times_s == ()
+    assert "legality/vmem-overflow" in res.error
+    # same hw point is inside the design space: a fitting tile measures
+    ok = M.measure_one(wl, hw, _sched(wl, choice, 16),
+                       M.MeasureOptions(warmup=1, repeats=2))
+    assert ok.ok and ok.error_type == ""
+
+
+def test_measure_batch_lowers_only_legal_candidates(gemm64):
+    wl, choice = gemm64
+    hw = _hw(vmem_kib=16)
+    pop = [_sched(wl, choice, 16),               # legal
+           _sched(wl, choice, 64),               # statically illegal
+           _sched(wl, choice, 16,                # legal dup -> memo-served
+                  order=reversed(wl.all_indices()))]
+    out = M.measure_batch(wl, hw, pop, M.MeasureOptions(warmup=1, repeats=2))
+    assert out[0].ok and out[2].ok
+    assert out[2].times_s == out[0].times_s      # dedup still works
+    assert out[1].error_type == "Illegal" and out[1].point is None
+    s = M.summarize_batch(out)
+    assert s["candidates"] == 3 and s["illegal"] == 1
+    assert s["measured"] == 2 and s["deduped"] == 1 and s["failed"] == 0
+
+
+def test_illegal_skip_never_retried_or_quarantined(gemm64, monkeypatch):
+    wl, choice = gemm64
+    calls = []
+    monkeypatch.setattr(M, "lower",
+                        lambda *a, **k: calls.append(a) or (_ for _ in ()).throw(
+                            AssertionError("illegal candidate was lowered")))
+    res = M.measure_one(wl, _hw(vmem_kib=16), _sched(wl, choice, 64),
+                        quarantine={("gemm", (64, 64, 64))})
+    assert res.error_type == "Illegal" and calls == []
+
+
 def test_measure_batch_mixes_failures_and_successes(gemm64):
     wl, choice = gemm64
     good = _sched(wl, choice, 32)
